@@ -1,0 +1,81 @@
+"""Beyond-paper ablation: does the paper's graph-regularized per-task
+personalization actually help an LM when tasks (user groups) have different
+token distributions?
+
+Three configurations of the SAME model on the same multi-task token stream
+(8 tasks, per-task unigram tilts):
+  * local        — personalization, NO graph mixing (eta=tau=0: each task's
+                   adapter learns alone);
+  * graph (ours) — the paper's mixed update on a ring relatedness graph;
+  * consensus    — uniform complete-graph mixing with large tau (all task
+                   adapters forced together == no personalization).
+
+Reports final train loss; personalization should win, and graph mixing
+should match/beat local when neighboring tasks are actually related
+(TokenPipeline gives each task a perturbation of a shared base).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.configs.base import ArchConfig
+from repro.core import GraphMultiTask, band_graph, complete_graph
+from repro.data.tokens import TokenPipeline
+from repro.models import TransformerLM
+from repro.optim import adamw
+from repro.train import train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--tasks", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = ArchConfig(
+        name="ablation", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        num_tasks=args.tasks, q_chunk=64,
+    )
+    model = TransformerLM(cfg)
+    variants = {
+        "local": GraphMultiTask(band_graph(args.tasks, 1), eta=0.0, tau=0.0,
+                                alpha=1.0),
+        # alpha matched to the optimizer timescale: with Adam providing the
+        # gradient step, the mixing stepsize must be of the same order as the
+        # learning rate or it drowns the personalization signal (lesson
+        # recorded in EXPERIMENTS.md)
+        "graph": GraphMultiTask(band_graph(args.tasks, 1), eta=0.05, tau=2.0,
+                                alpha=0.01),
+        "consensus": GraphMultiTask(complete_graph(args.tasks), eta=0.05,
+                                    tau=50.0),
+    }
+    rows = []
+    for name, gmt in variants.items():
+        # neighbor-correlated tilts: ring neighbors share most of their
+        # distribution shift — the regime the paper's coupling targets
+        pipe = TokenPipeline(cfg.vocab_size, seq_len=64, global_batch=16,
+                             num_tasks=args.tasks, seed=0, tilt=3.0,
+                             neighbor_corr=2)
+        state, hist = train_loop(
+            model, adamw(3e-3), iter(pipe), num_steps=args.steps,
+            key=jax.random.PRNGKey(0), multitask=gmt, log_every=args.steps - 1,
+        )
+        # adapter spread across tasks = personalization evidence
+        import jax.numpy as jnp
+
+        spread = float(jnp.std(state.params["task"]["head_bias"], axis=0).mean())
+        rows.append([name, hist[-1]["loss"], spread])
+        print(f"{name:10s} final_loss={hist[-1]['loss']:.4f} "
+              f"adapter_spread={spread:.5f}")
+    path = write_csv("ablation_mtl_lm.csv", ["variant", "final_loss", "spread"], rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Shared experiment scaffolding for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MultiTaskProblem, SQUARED, centralized_solution, theory
+from repro.core.objective import local_ridge_solution
+from repro.data.synthetic import ClusteredTasks, generate_clustered_tasks
+
+REPORTS = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def setup_problem(
+    num_clusters: int,
+    m: int = 100,
+    d: int = 100,
+    n: int = 500,
+    seed: int = 0,
+    lipschitz: float = 8.0,
+):
+    """Paper Appendix I setup: clustered tasks, 10-NN graph, Cor.2 (eta,tau)."""
+    rng = np.random.default_rng(seed)
+    tasks = generate_clustered_tasks(
+        rng, m=m, d=d, num_clusters=num_clusters, knn=min(10, m - 1)
+    )
+    x, y = tasks.sample(rng, n)
+    B, S = tasks.bs_constants()
+    eta, tau = theory.corollary2_parameters(
+        tasks.graph, B, max(S, 1e-2), lipschitz, n
+    )
+    problem = MultiTaskProblem(tasks.graph, SQUARED, eta, tau)
+    return tasks, jnp.asarray(x), jnp.asarray(y), problem
+
+
+def tune_local_reg(tasks: ClusteredTasks, x, y, regs=None) -> tuple[float, float]:
+    """Tune the Local baseline's ridge parameter on exact population risk."""
+    regs = regs or [10.0 ** e for e in range(-4, 2)]
+    best = (None, np.inf)
+    for r in regs:
+        w = local_ridge_solution(x, y, r)
+        risk = tasks.population_risk(np.asarray(w))
+        if risk < best[1]:
+            best = (r, risk)
+    return best
+
+
+def pop_risk_of_trace(tasks: ClusteredTasks, w_trace) -> list[float]:
+    return [tasks.population_risk(np.asarray(w)) for w in w_trace]
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    os.makedirs(REPORTS, exist_ok=True)
+    path = os.path.join(REPORTS, name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(v) for v in row) + "\n")
+    return path

@@ -1,0 +1,158 @@
+"""Analytic cost model: MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE) plus the
+sequential-scan corrections the HLO probes cannot count (XLA's cost analysis
+visits while-loop bodies once; the unrolled probes fix the LAYER loop and the
+single-chunk attention, but Mamba-SSD chunk scans and xLSTM time scans remain
+undercounted — their flops are added analytically here).
+
+All counts are GLOBAL (whole batch, all chips); divide by chip count for
+per-device terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.launch.specs import InputShape
+
+
+def param_counts(cfg: ArchConfig) -> tuple[float, float]:
+    """Returns (total_params, active_params_per_token), embeddings included
+    once (tied or not)."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def attn_params():
+        if cfg.use_mla:
+            r, dn, dr, dv = cfg.kv_lora, cfg.qk_nope, cfg.qk_rope, cfg.v_head_dim
+            return d * h * (dn + dr) + d * r + d * dr + r * h * dn + r * h * dv + h * dv * d
+        return d * h * hd + 2 * d * kvh * hd + h * hd * d
+
+    def mlp_params():
+        mult = 3 if cfg.mlp_kind == "swiglu" else 2
+        return mult * d * ff
+
+    def moe_params():
+        total = cfg.num_experts * 3 * d * ff + d * cfg.num_experts
+        total += cfg.num_shared_experts * 3 * d * ff
+        active = (cfg.top_k + cfg.num_shared_experts) * 3 * d * ff + d * cfg.num_experts
+        return total, active
+
+    def mamba_params():
+        di = 2 * d
+        nh = di // cfg.ssm_head_dim
+        return d * (2 * di + 2 * cfg.ssm_state + nh) + di * d + 4 * (di + 2 * cfg.ssm_state)
+
+    def mlstm_params():
+        di = 2 * d
+        return d * 2 * di + 3 * di * di + di * 2 * (di // 256 + 1) + di * d
+
+    def slstm_params():
+        nh = cfg.num_heads
+        hd_s = d // nh
+        return d * 4 * d + 4 * nh * hd_s * hd_s + d * d
+
+    per_kind = {}
+    for kind in set(cfg.pattern):
+        if kind in ("attn", "shared_attn"):
+            per_kind[kind] = (attn_params() + mlp_params(),) * 2
+        elif kind == "attn_moe":
+            tot, act = moe_params()
+            per_kind[kind] = (attn_params() + tot, attn_params() + act)
+        elif kind == "mamba":
+            per_kind[kind] = (mamba_params(),) * 2
+        elif kind == "mlstm":
+            per_kind[kind] = (mlstm_params(),) * 2
+        elif kind == "slstm":
+            per_kind[kind] = (slstm_params(),) * 2
+
+    layers = list(cfg.pattern) * cfg.num_periods + list(cfg.remainder)
+    total = active = 0.0
+    seen_shared = False
+    for kind in layers:
+        t, a = per_kind[kind]
+        active += a
+        if kind == "shared_attn":
+            if not seen_shared:
+                total += t
+                seen_shared = True
+        else:
+            total += t
+    emb = v * d * (cfg.num_codebooks if cfg.input_mode == "audio" else 1)
+    head = 0 if cfg.tie_embeddings else d * v * cfg.num_codebooks
+    total += emb + head
+    active += emb / max(1, 1) * 0 + (d * v * cfg.num_codebooks)  # head matmul per token
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """The classic 6*N*D (train) / 2*N*D (inference) accounting + attention
+    context flops; GLOBAL."""
+    _, n_active = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    layers = list(cfg.pattern) * cfg.num_periods + list(cfg.remainder)
+    n_attn = sum(1 for k in layers if k in ("attn", "attn_moe", "shared_attn"))
+    h, hd = cfg.num_heads, cfg.head_dim
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope + cfg.qk_rope
+        v_dim = cfg.v_head_dim
+    else:
+        qk_dim, v_dim = hd, hd
+    if shape.kind == "train":
+        tokens = b * s
+        ctx = s / 2 if cfg.sliding_window is None else min(cfg.sliding_window, s / 2)
+        attn_fl = 6 * tokens * ctx * h * (qk_dim + v_dim) * n_attn
+        return 6.0 * n_active * tokens + attn_fl
+    if shape.kind == "prefill":
+        tokens = b * s
+        ctx = s / 2 if cfg.sliding_window is None else min(cfg.sliding_window, s / 2)
+        attn_fl = 2 * tokens * ctx * h * (qk_dim + v_dim) * n_attn
+        return 2.0 * n_active * tokens + attn_fl
+    # decode: one token per sequence
+    tokens = b
+    ctx = s if cfg.sliding_window is None else min(cfg.sliding_window, s)
+    attn_fl = 2 * tokens * ctx * h * (qk_dim + v_dim) * n_attn
+    return 2.0 * n_active * tokens + attn_fl
+
+
+def scan_correction_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """Flops inside sequential inner scans (SSD chunks, xLSTM time steps)
+    that BOTH the scanned and probe lowerings count only once; GLOBAL, and
+    already scaled for fwd+bwd on train."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    tokens = b * s
+    mult = 3.0 if shape.kind == "train" else 1.0
+    layers = list(cfg.pattern) * cfg.num_periods + list(cfg.remainder)
+    total = 0.0
+    d = cfg.d_model
+    for kind in layers:
+        if kind == "mamba" and shape.kind != "decode":
+            di = 2 * d
+            nh = di // cfg.ssm_head_dim
+            c = min(cfg.mamba_chunk, s)
+            ds = cfg.ssm_state
+            # per token: CB row (2 c ds) + w*x (2 c nh hd) + states (4 ds di)
+            per_tok = 2 * c * ds + 2 * c * di + 4 * ds * di
+            total += per_tok * tokens
+        elif kind == "mlstm":
+            di = 2 * d
+            nh = cfg.num_heads
+            hd = di // nh
+            # C update + qC + qn per token ~ 5 nh hd^2
+            total += 5 * nh * hd * hd * tokens
+        elif kind == "slstm":
+            nh = cfg.num_heads
+            hd = d // nh
+            total += 8 * nh * hd * hd * tokens
+    return total * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s / link
+
+
+V5E = Hardware()

@@ -1,0 +1,99 @@
+"""Figure 3 reproduction: true stochastic algorithms (fresh samples each
+iteration) at C=10, minibatch sweep b in {40, 80, 100, 200, 500}; budget of
+10000 fresh samples per machine. SSR (accelerated minibatch SGD, Alg. 2) and
+SOL (stochastic prox, eq. 11) vs the Local/Centralized(n=500) references.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import setup_problem, tune_local_reg, write_csv
+from repro.core import centralized_solution, sol, ssr
+from repro.core.objective import local_ridge_solution
+
+
+def make_fresh_sampler(tasks):
+    """Fresh samples from the true distributions each call (jax-side)."""
+    chol = jnp.asarray(tasks.sigma_chol, jnp.float32)
+    true_w = jnp.asarray(tasks.true_w, jnp.float32)
+    noise = tasks.noise_std
+
+    def sample(key, b):
+        k1, k2 = jax.random.split(key)
+        z = jax.random.normal(k1, (tasks.m, b, tasks.d))
+        x = z @ chol.T
+        eps = noise * jax.random.normal(k2, (tasks.m, b))
+        y = jnp.einsum("mbd,md->mb", x, true_w) + eps
+        return x, y
+
+    return sample
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=100)
+    ap.add_argument("--d", type=int, default=100)
+    ap.add_argument("--n", type=int, default=500)
+    ap.add_argument("--budget", type=int, default=10000)
+    ap.add_argument("--batches", type=int, nargs="+",
+                    default=[40, 80, 100, 200, 500])
+    args = ap.parse_args(argv)
+
+    tasks, x, y, problem = setup_problem(10, m=args.m, d=args.d, n=args.n)
+    w_cent = centralized_solution(problem, x, y)
+    cent_risk = tasks.population_risk(np.asarray(w_cent))
+    reg, local_risk = tune_local_reg(tasks, x, y)
+    print(f"references: local={local_risk:.4f} centralized={cent_risk:.4f}")
+
+    sampler = make_fresh_sampler(tasks)
+    B_const, _ = tasks.bs_constants()
+    beta_f = problem.smoothness_loss(x)
+    eval_fn = lambda w: problem.erm_objective(w, x, y)  # cheap trace proxy
+
+    # The paper tunes stepsize parameters for its methods (Section 6); for
+    # SSR that means the AC-SA sigma (smaller sigma => larger alpha). We grid
+    # over sigma scales on a held-out seed and keep the best, like the paper.
+    def run_ssr(b, iters, sigma_scale, key):
+        sig = sigma_scale * float(
+            tasks.m * np.sqrt(
+                4.0 * 64.0 / tasks.m**2
+                * (1 + tasks.m * 0.1)
+            )
+        )
+        return ssr(problem, sampler, b, iters, key, eval_fn,
+                   beta_f=beta_f, B=B_const, d=tasks.d, sigma=sig)
+
+    rows = []
+    for b in args.batches:
+        iters = args.budget // b
+        # tune SSR sigma scale
+        best = (None, np.inf)
+        for sc in [1.0, 0.1, 0.01]:
+            res = run_ssr(b, iters, sc, jax.random.PRNGKey(7))
+            risk = tasks.population_risk(np.asarray(res.w))
+            if risk < best[1]:
+                best = (sc, risk)
+        res = run_ssr(b, iters, best[0], jax.random.PRNGKey(1))
+        risk = tasks.population_risk(np.asarray(res.w))
+        rows.append(["ssr", b, iters, risk])
+        print(f"  ssr b={b:4d} rounds={iters:4d} pop_risk={risk:.4f} "
+              f"(sigma_scale={best[0]})")
+        res = sol(problem, sampler, b, iters, jax.random.PRNGKey(2),
+                  eval_fn, d=tasks.d)
+        risk = tasks.population_risk(np.asarray(res.w))
+        rows.append(["sol", b, iters, risk])
+        print(f"  sol b={b:4d} rounds={iters:4d} pop_risk={risk:.4f}")
+    rows.append(["local_ref", args.n, 0, local_risk])
+    rows.append(["centralized_ref", args.n, 1, cent_risk])
+    path = write_csv("fig3_stochastic.csv",
+                     ["method", "batch", "rounds", "pop_risk"], rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

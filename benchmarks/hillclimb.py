@@ -1,0 +1,110 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: re-lower a chosen (arch, shape) with one or more
+optimization levers and report before/after roofline terms.
+
+Levers (all default-off == paper-faithful baseline):
+  --xlstm-chunk N        chunked + remat'd xLSTM time scans
+  --moe-gather           explicit FSDP gather of MoE expert weights
+  --microbatch N         gradient accumulation over N microbatches
+  --act-shard-d0         activation constraint (data, None, None) instead of
+                         the default (data, None, model)
+
+Results append to reports/hillclimb/<arch>__<shape>__<tag>.json.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get
+from repro.launch.dryrun import lower_and_compile, probe_cfg
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.specs import INPUT_SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--xlstm-chunk", type=int, default=0)
+    ap.add_argument("--xlstm-parallel", action="store_true")
+    ap.add_argument("--moe-gather", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--act-shard-d0", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--mla-replicate-cache", action="store_true")
+    ap.add_argument("--mla-seq-shard", action="store_true")
+    ap.add_argument("--probes", action="store_true")
+    args = ap.parse_args()
+
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh()
+    ax = mesh_axes()
+    fsdp = ax.fsdp[0]
+    batch_ax = fsdp if shape.global_batch % ax.fsdp_size == 0 else None
+    act = (batch_ax, None, None) if args.act_shard_d0 else (batch_ax, None, ax.model)
+    overrides = dict(
+        num_tasks=ax.fsdp_size,
+        moe_groups=ax.fsdp_size,
+        activation_sharding=act,
+        logits_sharding=(batch_ax, None, ax.model),
+        xlstm_chunk=args.xlstm_chunk,
+        xlstm_parallel=args.xlstm_parallel,
+        fsdp_gather_moe=args.moe_gather,
+        mla_replicate_cache=args.mla_replicate_cache,
+        mla_cache_seq_shard=args.mla_seq_shard,
+    )
+    if args.capacity_factor is not None:
+        overrides["capacity_factor"] = args.capacity_factor
+    cfg = dataclasses.replace(get(args.arch), **overrides)
+
+    result = {
+        "arch": args.arch, "shape": args.shape, "tag": args.tag,
+        "levers": {k: v for k, v in vars(args).items()
+                   if k not in ("arch", "shape", "tag", "probes")},
+        "num_layers": cfg.num_layers, "period": cfg.period,
+        "num_periods": cfg.num_periods, "remainder": len(cfg.remainder),
+    }
+    result["scanned"] = lower_and_compile(
+        cfg, shape, ax, mesh, microbatches=args.microbatch
+    )
+    if args.probes:
+        for n in (1, 2):
+            result[f"probe{n}"] = lower_and_compile(
+                probe_cfg(cfg, shape, n), shape, ax, mesh,
+                microbatches=args.microbatch,
+            )
+    out_dir = "reports/hillclimb"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    mem = result["scanned"]["memory"]
+    live = (
+        (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+        + (mem["output_bytes"] or 0) - (mem["alias_bytes"] or 0)
+    )
+    print(
+        f"{args.arch} {args.shape} [{args.tag}] "
+        f"mem/dev={live/2**30:.2f} GiB "
+        f"flops={result['scanned']['cost']['flops']:.3e} "
+        f"bytes={result['scanned']['cost']['bytes_accessed']:.3e} "
+        f"coll={result['scanned']['collectives']['total_wire_bytes']/2**30:.2f} GiB "
+        f"compile={result['scanned']['compile_s']:.1f}s"
+    )
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Roofline analysis: read the dry-run JSONs, extrapolate per-period probe
+costs to full depth, add analytic scan corrections, and emit the three-term
+roofline per (arch x shape):
+
+  compute term    = FLOPs_per_device / peak_FLOP/s
+  memory term     = HBM bytes_per_device / HBM_bw
+  collective term = collective wire bytes_per_device / ICI link bw
+
+All probe-derived numbers are per-device (the SPMD module is the per-device
+program). Depth extrapolation:
+
+  X_total = X_probe1 + (P - 1 + R/period) * (X_probe2 - X_probe1)
+
+with P = num_periods and R = remainder layers. The delta isolates one full
+pattern period exactly (embeddings/head/task-update appear in both probes and
+cancel). Methodology notes in EXPERIMENTS.md §Roofline.
+
+Usage:  python -m benchmarks.roofline [--dir reports/dryrun/singlepod]
+Emits reports/roofline.csv + a markdown table on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.costmodel import V5E, model_flops, param_counts, scan_correction_flops
+from repro.configs import get
+from repro.launch.specs import INPUT_SHAPES
+
+
+def _extrapolate(rec: dict, field: tuple[str, ...]) -> float | None:
+    def dig(d, path):
+        for p in path:
+            d = d.get(p) if isinstance(d, dict) else None
+            if d is None:
+                return None
+        return d
+
+    p1 = dig(rec.get("probe1", {}), field)
+    p2 = dig(rec.get("probe2", {}), field)
+    if p1 is None or p2 is None:
+        return None
+    per_period = p2 - p1
+    scale = rec["num_periods"] - 1 + rec["remainder"] / rec["period"]
+    return p1 + scale * per_period
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    flops_dev: float
+    bytes_dev: float
+    coll_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float
+    useful_frac: float
+    mem_device_gib: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyse_record(rec: dict, chips: int = 256) -> RooflineRow:
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get(arch)
+    shape = INPUT_SHAPES[shape_name]
+
+    flops = _extrapolate(rec, ("cost", "flops"))
+    byts = _extrapolate(rec, ("cost", "bytes_accessed"))
+    coll = _extrapolate(rec, ("collectives", "total_wire_bytes"))
+    if flops is None:  # no probes — fall back to scanned (undercounted)
+        flops = rec["scanned"]["cost"]["flops"]
+        byts = rec["scanned"]["cost"]["bytes_accessed"]
+        coll = rec["scanned"]["collectives"]["total_wire_bytes"]
+
+    # sequential-scan analytic correction (global -> per device)
+    flops = max(flops, 0.0) + scan_correction_flops(cfg, shape) / chips
+
+    compute_s = flops / V5E.peak_flops
+    memory_s = byts / V5E.hbm_bw
+    collective_s = coll / V5E.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops * chips) if flops else 0.0
+
+    mem = rec["scanned"]["memory"]
+    mem_gib = (
+        (mem["argument_bytes"] or 0)
+        + (mem["temp_bytes"] or 0)
+        + (mem["output_bytes"] or 0)
+        - (mem["alias_bytes"] or 0)
+    ) / 2**30
+    return RooflineRow(
+        arch, shape_name, flops, byts, coll,
+        compute_s, memory_s, collective_s, bottleneck,
+        mf, useful, mem_gib,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun/singlepod")
+    ap.add_argument("--csv", default="reports/roofline.csv")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        rows.append(analyse_record(rec))
+
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "useful FLOP frac | mem GiB/dev |"
+    )
+    print(hdr)
+    print("|" + "---|" * 8)
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        print(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.3e} | {r.memory_s:.3e} "
+            f"| {r.collective_s:.3e} | **{r.bottleneck}** | {r.useful_frac:.2f} "
+            f"| {r.mem_device_gib:.1f} |"
+        )
+
+    os.makedirs(os.path.dirname(args.csv), exist_ok=True)
+    import csv
+
+    with open(args.csv, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].as_dict()))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r.as_dict())
+    print(f"\nwrote {args.csv} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

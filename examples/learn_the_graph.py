@@ -1,0 +1,52 @@
+"""Beyond-paper example: LEARN the task-relatedness graph instead of
+assuming it (the extension Liu et al. 2017 consider; the paper fixes the
+graph). Alternates the paper's BOL solver with the MTRL closed-form
+relationship update, then compares against (a) the oracle 10-NN graph on the
+TRUE predictors and (b) learning with no graph at all.
+
+  PYTHONPATH=src python examples/learn_the_graph.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MultiTaskProblem, SQUARED, alternating_graph_learning, bol,
+    centralized_solution, disconnected_graph,
+)
+from repro.data.synthetic import generate_clustered_tasks
+
+rng = np.random.default_rng(0)
+tasks = generate_clustered_tasks(rng, m=20, d=15, num_clusters=3, knn=4,
+                                 perturb_scale=0.02)
+x, y = map(jnp.asarray, tasks.sample(rng, 40))  # scarce data: graph matters
+eta, tau = 0.5, 1.5
+
+# (a) oracle graph (the paper's assumption)
+oracle = MultiTaskProblem(tasks.graph, SQUARED, eta, tau)
+w_oracle = bol(oracle, x, y, num_iters=200).w
+
+# (b) no coupling
+lone = MultiTaskProblem(disconnected_graph(tasks.m), SQUARED, eta, 0.0)
+w_lone = bol(lone, x, y, num_iters=200).w
+
+# (c) learned graph (alternating)
+w_learn, g_learn, hist = alternating_graph_learning(
+    x, y, eta=eta, tau=tau, num_rounds=4, solver_iters=200
+)
+
+for name, w in [("oracle graph", w_oracle), ("no coupling", w_lone),
+                ("learned graph", w_learn)]:
+    print(f"{name:14s} population risk = {tasks.population_risk(np.asarray(w)):.4f}")
+
+a = g_learn.adjacency
+same = tasks.cluster_of[:, None] == tasks.cluster_of[None, :]
+np.fill_diagonal(same, False)
+off = ~same & ~np.eye(tasks.m, dtype=bool)
+print(f"\nlearned affinities: within-cluster mean = {a[same].mean():.3f}, "
+      f"across-cluster mean = {a[off].mean():.3f}")
+print("alternating history:", hist)

@@ -1,0 +1,58 @@
+"""Serve a small model with batched requests: prefill + decode over the KV
+cache API, with per-task personalization picked up from each request's
+task id, and a numerical cross-check of the flash-decode Pallas kernel
+against the serving path.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.models import TransformerLM
+from repro.models.attention import decode_attend
+from repro.serve import ServeEngine
+
+cfg = get("qwen2_5_14b", smoke=True)  # reduced GQA config
+model = TransformerLM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+engine = ServeEngine(model, params, max_seq=96)
+
+rng = np.random.default_rng(0)
+batch = 4
+prompts = {
+    "tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, 32), dtype=np.int64), jnp.int32
+    ),
+    "task_ids": jnp.arange(batch, dtype=jnp.int32) % cfg.num_tasks,
+}
+
+t0 = time.perf_counter()
+out = engine.generate(prompts, num_tokens=32)
+dt = time.perf_counter() - t0
+print(f"generated {out.shape} tokens for {batch} batched requests "
+      f"in {dt:.1f}s ({batch*32/dt:.1f} tok/s on CPU)")
+print("first request's continuation:", out[0][:16].tolist())
+
+# ---- kernel cross-check: serving attention == Pallas flash-decode ----
+b, s, kvh, hd = 2, 256, cfg.num_kv_heads, cfg.head_dim
+h = cfg.num_heads
+q = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+pos = jnp.asarray(200, jnp.int32)
+ref = decode_attend(q, k, v, pos)
+ker = decode_attention_pallas(
+    q.reshape(b, kvh, h // kvh, hd), k, v, pos, block_s=128, interpret=True
+).reshape(b, 1, h, hd)
+err = float(jnp.max(jnp.abs(ref - ker)))
+print(f"flash-decode Pallas kernel vs serving path: max |diff| = {err:.2e}")

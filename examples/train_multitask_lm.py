@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-parameter LM with graph-regularized
+multi-task personalization (the paper's technique as a first-class feature).
+
+Eight tasks (user groups) with different token distributions share a backbone;
+per-task parameters (final-norm gain, head bias) follow the paper's mixed
+update  theta_i <- sum_k mu_ki theta_k - alpha g_i  on a ring relatedness
+graph. Loss is reported per task group so the personalization benefit is
+visible.
+
+  PYTHONPATH=src python examples/train_multitask_lm.py --steps 30
+  PYTHONPATH=src python examples/train_multitask_lm.py --steps 300 --full
+
+(--full uses the ~100M config; the default is a ~20M config that runs in a
+couple of minutes on CPU.)
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import GraphMultiTask, band_graph
+from repro.data.tokens import TokenPipeline
+from repro.models import TransformerLM
+from repro.optim import adamw, cosine_schedule
+from repro.train import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=30)
+ap.add_argument("--full", action="store_true", help="~100M params")
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--batch", type=int, default=8)
+args = ap.parse_args()
+
+if args.full:
+    dims = dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                head_dim=64, d_ff=3072, vocab_size=32000)
+else:
+    dims = dict(num_layers=6, d_model=384, num_heads=6, num_kv_heads=6,
+                head_dim=64, d_ff=1536, vocab_size=8192)
+
+cfg = ArchConfig(name="mtl-lm", family="dense", pattern=("attn",),
+                 num_tasks=8, q_chunk=128, **dims)
+model = TransformerLM(cfg)
+n_params = sum(
+    int(np.prod(l.shape))
+    for l in jax.tree_util.tree_leaves(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+)
+print(f"model: {n_params/1e6:.1f}M parameters, {cfg.num_tasks} tasks")
+
+pipe = TokenPipeline(cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+                     num_tasks=cfg.num_tasks, seed=0)
+gmt = GraphMultiTask(band_graph(cfg.num_tasks, 1), eta=0.1, tau=1.0)
+opt = adamw(cosine_schedule(3e-4, warmup=20, total=args.steps))
+
+state, history = train_loop(
+    model, opt, iter(pipe), num_steps=args.steps,
+    key=jax.random.PRNGKey(0), multitask=gmt, log_every=max(args.steps // 10, 1),
+)
+for h in history:
+    print(f"step {h['step']:4d}  loss {h['loss']:.4f}  nll {h['nll']:.4f}")
+
+# show that task params actually diverged (personalization happened) while
+# remaining graph-smooth (regularization happened)
+import jax.numpy as jnp
+
+tp = state.params["task"]["head_bias"]
+spread = float(jnp.std(tp, axis=0).mean())
+neighbor = float(jnp.mean(jnp.abs(tp - jnp.roll(tp, 1, axis=0))))
+print(f"\ntask head-bias spread across tasks: {spread:.5f}")
+print(f"mean |theta_i - theta_(i+1)| on the ring: {neighbor:.5f}")
+print("(nonzero spread = personalization; small neighbor gaps = graph coupling)")

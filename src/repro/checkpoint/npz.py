@@ -1,0 +1,59 @@
+"""Flat-path npz checkpointing for arbitrary pytrees.
+
+Leaves are keyed by their tree path ("stages/0/slot0/attn/wq"); restore
+rebuilds into a caller-provided template (shape/dtype checked) so it composes
+with sharded pytrees: restore on host, then device_put with the target
+shardings.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(path: str, tree: PyTree, step: int | None = None) -> None:
+    arrs = {k: np.asarray(v) for k, v in _paths(tree)}
+    if step is not None:
+        arrs["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrs)
+    os.replace(tmp, path)  # atomic publish
+
+
+def load_pytree(path: str, template: PyTree) -> tuple[PyTree, int | None]:
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else None
+        flat = _paths(template)
+        restored = []
+        for key, leaf in flat:
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                    f"template {np.shape(leaf)}"
+                )
+            restored.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, restored), step

@@ -1,0 +1,29 @@
+from repro.core.graph import (
+    TaskGraph,
+    knn_graph,
+    ring_graph,
+    band_graph,
+    complete_graph,
+    cluster_graph,
+    disconnected_graph,
+)
+from repro.core.objective import (
+    Loss,
+    SQUARED,
+    LOGISTIC,
+    MultiTaskProblem,
+    local_ridge_solution,
+)
+from repro.core.algorithms import bsr, bol, gd, RunResult
+from repro.core.stochastic import ssr, sol, minibatch_prox, minibatch_sampler
+from repro.core.baselines import admm, sdca, local_solution, centralized_solution
+from repro.core.delayed import bol_delayed, theorem7_rate
+from repro.core.consensus import consensus_sgd, consensus_distance
+from repro.core.distributed import GraphMultiTask, mix_all_gather, mix_ring
+from repro.core.runners import bol_sharded, bsr_sharded
+from repro.core.graph_learning import (
+    alternating_graph_learning,
+    laplacian_from_relationship,
+    mtrl_relationship,
+)
+from repro.core import theory

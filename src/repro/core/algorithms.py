@@ -1,0 +1,241 @@
+"""Batch (ERM) algorithms of Section 3.
+
+* ``bsr`` — "directly solving the regularizer" (Section 3.1, eq. (6)/(7)):
+  gradient descent in the U = W M^{1/2} space; dense (broadcast) mixing of
+  per-machine *gradients* with weights ``mu = alpha M^{-1}``.
+* ``bol`` — "directly optimizing the loss" (Section 3.2, eq. (8)/(9)):
+  linearize only the regularizer; neighbor-mix the *iterates* with the sparse
+  weights ``mu = I - alpha eta M`` and then solve a local prox subproblem with
+  the non-linearized local empirical loss.
+
+Both come in plain and Nesterov-accelerated flavours (Appendix C); both are
+written as jit-able scans so the exact same step functions run under
+``shard_map`` in `repro/core/distributed.py`.
+
+Conventions: tasks stacked on axis 0; per-machine gradients are the gradients
+of the *local* empirical risks F_hat_i (i.e. ``m *`` the gradient of
+F_hat = (1/m) sum_i F_hat_i).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import MultiTaskProblem
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- prox
+def prox_squared_loss(v: Array, x: Array, y: Array, alpha: Array | float) -> Array:
+    """Exact prox of the local squared-loss empirical risk (vmapped over tasks).
+
+    argmin_u 1/(2 alpha) ||u - v||^2 + (1/n) ||X u - y||^2
+    => (I/alpha + (2/n) X^T X) u = v/alpha + (2/n) X^T y
+
+    v: (m, d), x: (m, n, d), y: (m, n).
+    """
+    n = x.shape[1]
+
+    def solve_one(vi, xi, yi):
+        d = vi.shape[0]
+        a_mat = jnp.eye(d) / alpha + (2.0 / n) * xi.T @ xi
+        b = vi / alpha + (2.0 / n) * xi.T @ yi
+        return jnp.linalg.solve(a_mat, b)
+
+    return jax.vmap(solve_one)(v, x, y)
+
+
+def prox_gd(
+    v: Array,
+    grad_fn: Callable[[Array], Array],
+    alpha: float,
+    beta_local: float,
+    num_steps: int = 50,
+) -> Array:
+    """Generic inexact prox via fixed-budget gradient descent (jit-friendly).
+
+    Minimizes 1/(2 alpha)||u - v||^2 + F_hat_i(u) for all tasks at once;
+    ``grad_fn`` maps the (m, d) stack to the stack of local-risk gradients.
+    The paper notes (Schmidt et al. 2011) that accelerated prox-gradient
+    tolerates inexact steps — a fixed iteration budget suffices.
+    """
+    step = 1.0 / (1.0 / alpha + beta_local)
+
+    def body(u, _):
+        g = (u - v) / alpha + grad_fn(u)
+        return u - step * g, None
+
+    u0 = v  # warm start at the prox center (Appendix F, Lemma 6)
+    u, _ = jax.lax.scan(body, u0, None, length=num_steps)
+    return u
+
+
+# ---------------------------------------------------------------- BSR (3.1)
+class RunResult(NamedTuple):
+    w: Array  # (m, d) final iterate
+    objective_trace: Array  # (T,) ERM objective per iteration
+    w_trace: Array | None = None  # optional (T, m, d)
+
+
+def _trace_runner(step_fn, init_state, w_of, objective_fn, num_iters, keep_iterates):
+    def body(state, t):
+        state = step_fn(state, t)
+        w = w_of(state)
+        out = (objective_fn(w), w) if keep_iterates else (objective_fn(w), 0)
+        return state, out
+
+    final, (trace, ws) = jax.lax.scan(body, init_state, jnp.arange(num_iters))
+    return RunResult(w_of(final), trace, ws if keep_iterates else None)
+
+
+def bsr(
+    problem: MultiTaskProblem,
+    x: Array,
+    y: Array,
+    num_iters: int,
+    stepsize: float | None = None,
+    accelerated: bool = True,
+    w0: Array | None = None,
+    keep_iterates: bool = False,
+) -> RunResult:
+    """Batch "solve the regularizer" (eq. (6)): W ← (1-αη)W − α M^{-1} G(W).
+
+    G rows are the per-machine gradients ∇F_hat_k(w_k). Dense mixing with
+    ``M^{-1}`` (computed offline, as the paper prescribes). Accelerated via
+    Nesterov momentum in the U-space, where the objective is
+    (β_F + η)/m-smooth and (η/m)-strongly convex.
+    """
+    m, _, d = x.shape
+    eta, tau = problem.eta, problem.tau
+    beta_f = problem.smoothness_loss(x)
+    alpha = stepsize if stepsize is not None else 1.0 / (beta_f + eta)
+    m_inv = jnp.asarray(problem.graph.metric_inverse(eta, tau), jnp.float32)
+
+    if accelerated:
+        kappa = (beta_f + eta) / eta
+        momentum = (np.sqrt(kappa) - 1.0) / (np.sqrt(kappa) + 1.0)
+    else:
+        momentum = 0.0
+
+    def grads(w):  # per-machine gradients: m * grad of (1/m) sum risks
+        return m * problem.loss_grad(w, x, y)
+
+    w_init = jnp.zeros((m, d)) if w0 is None else w0
+
+    def step(state, _):
+        w, w_prev = state
+        yv = w + momentum * (w - w_prev)
+        w_new = (1.0 - alpha * eta) * yv - alpha * (m_inv @ grads(yv))
+        return (w_new, w)
+
+    return _trace_runner(
+        step,
+        (w_init, w_init),
+        lambda s: s[0],
+        lambda w: problem.erm_objective(w, x, y),
+        num_iters,
+        keep_iterates,
+    )
+
+
+# ---------------------------------------------------------------- BOL (3.2)
+def bol(
+    problem: MultiTaskProblem,
+    x: Array,
+    y: Array,
+    num_iters: int,
+    stepsize: float | None = None,
+    accelerated: bool = True,
+    exact_prox: bool = True,
+    inner_steps: int = 50,
+    w0: Array | None = None,
+    keep_iterates: bool = False,
+) -> RunResult:
+    """Batch "optimize the loss" (eq. (8)/(9)).
+
+    Per iteration: one round of *neighbor-only* communication producing the
+    mixed iterate  w~_i = sum_k mu_ki w_k  with  mu = I - alpha eta M,  then a
+    purely local prox against the non-linearized empirical loss.
+
+    Default stepsize 1/(m alpha) = beta_R = (eta + tau lam_m)/m, i.e.
+    alpha = 1/(eta + tau lam_m) — the smoothness constant of R.
+    """
+    m, _, d = x.shape
+    eta, tau = problem.eta, problem.tau
+    lam_max = problem.graph.lambda_max
+    alpha = stepsize if stepsize is not None else 1.0 / (eta + tau * lam_max)
+    mix = jnp.asarray(problem.graph.bol_mixing(eta, tau, alpha), jnp.float32)
+
+    if accelerated:
+        # Accelerated prox-gradient on g = R (smooth, strongly convex) with
+        # h = F_hat handled by the prox: kappa = beta_R / mu_R.
+        kappa = (eta + tau * lam_max) / eta
+        momentum = (np.sqrt(kappa) - 1.0) / (np.sqrt(kappa) + 1.0)
+    else:
+        momentum = 0.0
+
+    beta_local = problem.smoothness_loss(x)
+
+    def local_prox(v):
+        if exact_prox and problem.loss.name == "squared":
+            return prox_squared_loss(v, x, y, alpha)
+        grad_fn = lambda u: x.shape[0] * problem.loss_grad(u, x, y)
+        return prox_gd(v, grad_fn, alpha, beta_local, inner_steps)
+
+    w_init = jnp.zeros((m, d)) if w0 is None else w0
+
+    def step(state, _):
+        w, w_prev = state
+        yv = w + momentum * (w - w_prev)
+        mixed = mix @ yv  # the ONLY communication of the iteration
+        w_new = local_prox(mixed)
+        return (w_new, w)
+
+    return _trace_runner(
+        step,
+        (w_init, w_init),
+        lambda s: s[0],
+        lambda w: problem.erm_objective(w, x, y),
+        num_iters,
+        keep_iterates,
+    )
+
+
+# ----------------------------------------------------- plain GD on (2), (3)
+def gd(
+    problem: MultiTaskProblem,
+    x: Array,
+    y: Array,
+    num_iters: int,
+    stepsize: float | None = None,
+    w0: Array | None = None,
+    keep_iterates: bool = False,
+) -> RunResult:
+    """Vanilla gradient descent on the full objective, eq. (3)/(4): both the
+    loss and the regularizer linearized. Included because the paper uses it to
+    motivate that *plain* consensus-style updates already solve MTL."""
+    m, _, d = x.shape
+    eta, tau = problem.eta, problem.tau
+    beta = problem.smoothness_loss(x) + eta + tau * problem.graph.lambda_max
+    alpha = stepsize if stepsize is not None else 1.0 / beta
+    mix = jnp.asarray(problem.graph.bol_mixing(eta, tau, alpha), jnp.float32)
+
+    w_init = jnp.zeros((m, d)) if w0 is None else w0
+
+    def step(w, _):
+        g_local = m * problem.loss_grad(w, x, y)
+        return mix @ w - alpha * g_local
+
+    return _trace_runner(
+        lambda s, t: step(s, t),
+        w_init,
+        lambda s: s,
+        lambda w: problem.erm_objective(w, x, y),
+        num_iters,
+        keep_iterates,
+    )

@@ -1,0 +1,82 @@
+"""Delay-tolerant BOL (Appendix G, Theorem 7).
+
+Each machine performs the proximal-gradient step (20) against *stale* copies
+of its neighbors' iterates: machine i sees w_k^{t - d_ik(t)} with delays
+bounded by Gamma. Theorem 7 (for doubly-stochastic adjacency) shows linear
+convergence at the degraded rate (1 - eta/(eta+tau))^(t/(1+Gamma)).
+
+We simulate delays with a history ring buffer of the last (Gamma+1) stacked
+iterates and a per-(i,k) delay schedule (fixed or resampled per step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import RunResult, prox_squared_loss
+from repro.core.objective import MultiTaskProblem
+
+Array = jax.Array
+
+
+def bol_delayed(
+    problem: MultiTaskProblem,
+    x: Array,
+    y: Array,
+    num_iters: int,
+    max_delay: int,
+    key: Array | None = None,
+    fixed_delay: bool = False,
+) -> RunResult:
+    """BOL with stale neighbor iterates, eq. (20).
+
+    Inverse stepsize beta = (eta + tau)/m per Theorem 7 (requires the
+    doubly-stochastic normalization of A; callers should pass a graph whose
+    rows sum to 1 for the theorem's rate to apply — the method itself runs on
+    any graph).
+    """
+    if problem.loss.name != "squared":
+        raise NotImplementedError("delayed BOL implemented for squared loss")
+    m, n, d = x.shape
+    eta, tau = problem.eta, problem.tau
+    a_adj = jnp.asarray(problem.graph.adjacency, jnp.float32)
+    deg = a_adj.sum(axis=1)
+    beta = (eta + tau) / m  # Theorem 7 stepsize (note: tau*max row sum = tau)
+    alpha = 1.0 / (beta * m)  # prox parameter of the local subproblem
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    hist_len = max_delay + 1
+
+    def step(state, t):
+        w, hist, k = state  # hist: (hist_len, m, d) ring buffer, hist[0]=newest
+        k, sub = jax.random.split(k)
+        if fixed_delay:
+            delays = jnp.full((m, m), max_delay, jnp.int32)
+        else:
+            delays = jax.random.randint(sub, (m, m), 0, max_delay + 1)
+        delays = jnp.minimum(delays, t)  # can't look before t=0
+        # stale neighbor view: for each (i, k) pick hist[delays[i,k]][k]
+        stale = hist[delays, jnp.arange(m)[None, :], :]  # (m, m, d)
+        # noisy regularizer gradient (eq. in Appendix G):
+        grad_r = (
+            eta * w
+            + tau * (deg[:, None] * w - jnp.einsum("ik,ikd->id", a_adj, stale))
+        ) / m
+        center = w - grad_r / beta
+        w_new = prox_squared_loss(center, x, y, alpha)
+        hist_new = jnp.concatenate([w_new[None], hist[:-1]], axis=0)
+        return (w_new, hist_new, k), problem.erm_objective(w_new, x, y)
+
+    w0 = jnp.zeros((m, d))
+    hist0 = jnp.zeros((hist_len, m, d))
+    (wf, _, _), trace = jax.lax.scan(
+        step, (w0, hist0, key), jnp.arange(num_iters)
+    )
+    return RunResult(wf, trace)
+
+
+def theorem7_rate(eta: float, tau: float, gamma: int) -> float:
+    """Per-iteration contraction factor (1 - eta/(eta+tau))^(1/(1+Gamma))."""
+    return float((1.0 - eta / (eta + tau)) ** (1.0 / (1.0 + gamma)))

@@ -1,0 +1,209 @@
+"""Distributed (mesh-sharded) implementations of the paper's updates.
+
+Two layers:
+
+1. **Collective primitives** (`mix_all_gather`, `mix_ring`): the neighbor
+   averaging  w~_i = sum_k mu_ki w_k  executed *on device*, tasks sharded
+   along a named mesh axis. Dense mixing (BSR, arbitrary graphs) uses
+   ``all_gather`` + a mixing matmul; band/ring graphs (BOL's peer-to-peer
+   regime, matched to the TPU ICI torus) use ``collective_permute`` hops —
+   communication per machine proportional to |E|/m exactly as in Table 1.
+
+2. **``GraphMultiTask``**: the production integration. Partitions a model
+   pytree into shared and per-task (personalized) parameters, gives each task
+   shard its own copy of the personalized leaves (leading axis = task), and
+   applies the paper's mixed update inside ``train_step``:
+
+       theta_i <- sum_k mu_ki theta_k - alpha * g_i            (eq. (3))
+
+   with the shared backbone following plain data-parallel SGD/Adam. Setting
+   the graph to the complete graph with uniform weights recovers consensus
+   (fully shared) training — Section 5's limit — so the feature strictly
+   generalizes standard data-parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import TaskGraph
+
+Array = jax.Array
+PyTree = Any
+
+
+# ------------------------------------------------------- collective mixing
+def mix_all_gather(theta: Array, mix_row_weights: Array, axis_name: str) -> Array:
+    """Dense mixing under shard_map: each device holds its own task's theta
+    (leading axis 1); all-gather over the task axis then contract with this
+    device's column of the mixing matrix.
+
+    theta: (1, ...) local block; mix_row_weights: (m,) = mu[:, i] for my i.
+    """
+    gathered = jax.lax.all_gather(theta, axis_name, axis=0, tiled=True)  # (m, ...)
+    w = mix_row_weights.reshape((-1,) + (1,) * (gathered.ndim - 1))
+    return jnp.sum(w * gathered, axis=0, keepdims=True)
+
+
+def mix_ring(
+    theta: Array,
+    self_weight: Array,
+    neighbor_weights: tuple[float, ...],
+    axis_name: str,
+    axis_size: int,
+) -> Array:
+    """Band-graph mixing via collective_permute ring hops (peer-to-peer).
+
+    new_i = self_weight * theta_i
+            + sum_{o=1..bw} nw[o-1] * (theta_{i-o} + theta_{i+o})
+
+    Each hop is one bidirectional collective_permute — exactly the paper's
+    "communicate only with graph neighbors", mapped onto the ICI ring.
+    """
+    out = self_weight * theta
+    fwd = theta
+    bwd = theta
+    idx = jax.lax.axis_index(axis_name)
+    del idx  # permutation built from static axis_size below
+    for off, wgt in enumerate(neighbor_weights, start=1):
+        perm_fwd = [(s, (s + 1) % axis_size) for s in range(axis_size)]
+        perm_bwd = [(s, (s - 1) % axis_size) for s in range(axis_size)]
+        fwd = jax.lax.ppermute(fwd, axis_name, perm_fwd)
+        bwd = jax.lax.ppermute(bwd, axis_name, perm_bwd)
+        out = out + wgt * (fwd + bwd)
+    return out
+
+
+def mixing_spec_for_band_graph(
+    graph: TaskGraph, eta: float, tau: float, alpha: float
+) -> tuple[float, tuple[float, ...]] | None:
+    """If the graph is a uniform band graph, return (self_weight,
+    neighbor_weights) for the BOL mixing mu = I - alpha*eta*M; else None."""
+    a = graph.adjacency
+    m = graph.m
+    first = a[0]
+    # detect band: a[i, j] depends only on ring distance
+    dists = np.minimum(np.arange(m), m - np.arange(m))
+    for i in range(m):
+        rolled = np.roll(a[i], -i)
+        if not np.allclose(rolled, first):
+            return None
+    bw = 0
+    weights = []
+    for off in range(1, m // 2 + 1):
+        if first[off] > 0:
+            bw = off
+            weights.append(float(alpha * tau * first[off]))
+        elif any(first[o] > 0 for o in range(off + 1, m // 2 + 1)):
+            return None  # holes in the band
+        else:
+            break
+    deg = float(a[0].sum())
+    self_w = 1.0 - alpha * (eta + tau * deg)
+    return self_w, tuple(weights)
+
+
+# ------------------------------------------------------------ integration
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphMultiTask:
+    """Graph-regularized per-task personalization over a mesh axis.
+
+    * ``graph``: relatedness graph over the ``m`` task shards.
+    * ``eta, tau``: the paper's regularization strengths.
+    * ``alpha``: mixing stepsize (default 1/(eta + tau*lambda_m), the BOL
+      smoothness rule).
+    * ``is_task_param``: predicate on (path_string, leaf) choosing which
+      leaves are personalized. Personalized leaves get a leading task axis.
+    """
+
+    graph: TaskGraph
+    eta: float
+    tau: float
+    alpha: float | None = None
+    is_task_param: Callable[[str, Array], bool] = lambda p, x: "task" in p
+
+    @property
+    def m(self) -> int:
+        return self.graph.m
+
+    def _alpha(self) -> float:
+        if self.alpha is not None:
+            return self.alpha
+        return 1.0 / (self.eta + self.tau * self.graph.lambda_max)
+
+    def mixing_matrix(self) -> np.ndarray:
+        """BOL weights mu = I - alpha*eta*M = I - alpha*(eta I + tau L).
+        eta == tau == 0 degenerates to the identity (purely local learning)."""
+        if self.eta == 0.0 and self.tau == 0.0:
+            return np.eye(self.m)
+        if self.eta == 0.0:
+            lap = self.graph.laplacian()
+            alpha = self.alpha if self.alpha is not None else 1.0 / max(
+                self.tau * self.graph.lambda_max, 1e-12
+            )
+            return np.eye(self.m) - alpha * self.tau * lap
+        return self.graph.bol_mixing(self.eta, self.tau, self._alpha())
+
+    # ---- parameter-tree surgery ----
+    def partition(self, params: PyTree) -> tuple[PyTree, PyTree]:
+        """Split params into (shared, task) trees (None-filled complements)."""
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        treedef = jax.tree_util.tree_structure(params)
+        shared, task = [], []
+        for path, leaf in flat:
+            if self.is_task_param(_path_str(path), leaf):
+                shared.append(None)
+                task.append(leaf)
+            else:
+                shared.append(leaf)
+                task.append(None)
+        return (
+            jax.tree_util.tree_unflatten(treedef, shared),
+            jax.tree_util.tree_unflatten(treedef, task),
+        )
+
+    def replicate_task_params(self, params: PyTree) -> PyTree:
+        """Give every personalized leaf a leading task axis (m, ...)."""
+
+        def rep(path, leaf):
+            if self.is_task_param(_path_str(path), leaf):
+                return jnp.broadcast_to(leaf[None], (self.m,) + leaf.shape)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(rep, params)
+
+    # ---- the update ----
+    def mix_task_params(self, params: PyTree) -> PyTree:
+        """Apply  theta <- mu^T theta  along each personalized leaf's leading
+        task axis (one einsum per leaf; under pjit the contraction over the
+        sharded task axis lowers to the mixing collective)."""
+        mix = jnp.asarray(self.mixing_matrix().T, jnp.float32)  # mu_ki sum
+
+        def go(path, leaf):
+            if self.is_task_param(_path_str(path), leaf):
+                flat = leaf.reshape(self.m, -1)
+                mixed = (mix @ flat.astype(jnp.float32)).astype(leaf.dtype)
+                return mixed.reshape(leaf.shape)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(go, params)
+
+    def graph_penalty(self, params: PyTree) -> Array:
+        """R(theta) over all personalized leaves, for loss-side regularization
+        (the 'centralized' flavor; the mixed update is the distributed one)."""
+        total = jnp.zeros(())
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        for path, leaf in flat:
+            if self.is_task_param(_path_str(path), leaf):
+                total = total + self.graph.penalty(
+                    leaf.reshape(self.m, -1).astype(jnp.float32), self.eta, self.tau
+                )
+        return total

@@ -1,0 +1,188 @@
+"""Task-relatedness graphs, Laplacians and mixing matrices.
+
+This is the combinatorial heart of the paper: a weighted graph ``A`` over the
+``m`` tasks, its Laplacian ``L = diag(A 1) - A``, the induced metric matrix
+``M = I + (tau/eta) L`` and the two mixing-weight families used by the
+algorithms:
+
+* BSR / SSR ("solve the regularizer"): ``mu = alpha * M^{-1}``  (dense).
+* BOL / SOL ("optimize the loss"):     ``mu = I - alpha * eta * M``
+  (sparse — supported exactly on the graph edges plus the diagonal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """A weighted, undirected task-relatedness graph over ``m`` tasks."""
+
+    adjacency: np.ndarray  # (m, m) symmetric, non-negative, zero diagonal
+
+    def __post_init__(self):
+        a = np.asarray(self.adjacency, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.allclose(a, a.T):
+            raise ValueError("adjacency must be symmetric")
+        if (a < 0).any():
+            raise ValueError("adjacency must be non-negative")
+        a = a.copy()
+        np.fill_diagonal(a, 0.0)
+        object.__setattr__(self, "adjacency", a)
+
+    # ---------------------------------------------------------------- basics
+    @property
+    def m(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(np.count_nonzero(np.triu(self.adjacency, k=1)))
+
+    def laplacian(self) -> np.ndarray:
+        a = self.adjacency
+        return np.diag(a.sum(axis=1)) - a
+
+    def laplacian_eigvals(self) -> np.ndarray:
+        """Eigenvalues 0 = lam_1 <= ... <= lam_m of the Laplacian."""
+        return np.linalg.eigvalsh(self.laplacian())
+
+    @property
+    def lambda_max(self) -> float:
+        return float(self.laplacian_eigvals()[-1])
+
+    def is_connected(self) -> bool:
+        # Connected iff the second-smallest Laplacian eigenvalue is positive.
+        ev = self.laplacian_eigvals()
+        return bool(ev[1] > 1e-10 * max(1.0, ev[-1]))
+
+    def is_doubly_stochastic(self, atol: float = 1e-8) -> bool:
+        """Row sums == 1 (symmetric, so column sums too) — Appendix G regime."""
+        return bool(np.allclose(self.adjacency.sum(axis=1), 1.0, atol=atol))
+
+    # ----------------------------------------------------------- paper terms
+    def metric_matrix(self, eta: float, tau: float) -> np.ndarray:
+        """``M = I + (tau/eta) L`` (positive definite for eta > 0)."""
+        if eta <= 0:
+            raise ValueError("eta must be positive for M to be defined")
+        return np.eye(self.m) + (tau / eta) * self.laplacian()
+
+    def metric_inverse(self, eta: float, tau: float) -> np.ndarray:
+        """``M^{-1}`` — the paper computes this offline, once (Section 3.1)."""
+        return np.linalg.inv(self.metric_matrix(eta, tau))
+
+    def metric_sqrt(self, eta: float, tau: float) -> np.ndarray:
+        """``M^{1/2}`` via eigendecomposition (used by U-space algorithms)."""
+        m_mat = self.metric_matrix(eta, tau)
+        w, v = np.linalg.eigh(m_mat)
+        return (v * np.sqrt(np.maximum(w, 0.0))) @ v.T
+
+    def metric_inv_sqrt(self, eta: float, tau: float) -> np.ndarray:
+        m_mat = self.metric_matrix(eta, tau)
+        w, v = np.linalg.eigh(m_mat)
+        return (v / np.sqrt(np.maximum(w, 1e-30))) @ v.T
+
+    # --------------------------------------------------------- mixing weights
+    def bsr_mixing(self, eta: float, tau: float, alpha: float) -> np.ndarray:
+        """Dense averaging weights ``mu = alpha * M^{-1}`` (eq. after (7))."""
+        return alpha * self.metric_inverse(eta, tau)
+
+    def bol_mixing(self, eta: float, tau: float, alpha: float) -> np.ndarray:
+        """Sparse averaging weights ``mu = I - alpha*eta*M`` (Table 1, eq (4)).
+
+        mu_ii = 1 - alpha*(eta + tau*deg_i),  mu_ik = alpha*tau*a_ik.
+        Supported on graph edges only — peer-to-peer communication.
+        """
+        return np.eye(self.m) - alpha * eta * self.metric_matrix(eta, tau)
+
+    def consensus_mixing(self) -> np.ndarray:
+        """Doubly-stochastic limit weights of eq. (12): ``I - L/lambda_m``."""
+        return np.eye(self.m) - self.laplacian() / self.lambda_max
+
+    # ------------------------------------------------------------ regularizer
+    def penalty(self, w_stack: Array, eta: float, tau: float) -> Array:
+        """``R(W) = eta/(2m) ||W||_F^2 + tau/(2m) tr(W L W^T)``.
+
+        ``w_stack``: (m, d) — row i is task i's predictor (note: the paper
+        writes W as d x m; we stack tasks on the leading axis throughout the
+        code since that is the natural sharded layout).
+        """
+        lap = jnp.asarray(self.laplacian(), dtype=w_stack.dtype)
+        m = self.m
+        sq = jnp.sum(w_stack * w_stack)
+        smooth = jnp.sum(w_stack * (lap @ w_stack))
+        return eta / (2 * m) * sq + tau / (2 * m) * smooth
+
+    def penalty_grad(self, w_stack: Array, eta: float, tau: float) -> Array:
+        """``∇_W R(W) = (1/m) (eta I + tau L) W`` (tasks stacked on axis 0)."""
+        lap = jnp.asarray(self.laplacian(), dtype=w_stack.dtype)
+        return (eta * w_stack + tau * (lap @ w_stack)) / self.m
+
+
+# ------------------------------------------------------------------ builders
+def knn_graph(predictors: np.ndarray, k: int = 10) -> TaskGraph:
+    """Binary k-nearest-neighbour graph on task predictors (Appendix I).
+
+    Task i is connected to the k tasks whose true models are most similar
+    (Euclidean); the result is symmetrized (union of directed k-NN edges).
+    """
+    w = np.asarray(predictors, dtype=np.float64)
+    m = w.shape[0]
+    if not 1 <= k < m:
+        raise ValueError(f"need 1 <= k < m, got k={k}, m={m}")
+    d2 = ((w[:, None, :] - w[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    a = np.zeros((m, m))
+    nbrs = np.argsort(d2, axis=1)[:, :k]
+    rows = np.repeat(np.arange(m), k)
+    a[rows, nbrs.ravel()] = 1.0
+    a = np.maximum(a, a.T)  # symmetrize
+    return TaskGraph(a)
+
+
+def ring_graph(m: int, weight: float = 1.0) -> TaskGraph:
+    """Cycle graph — maps 1:1 onto a TPU ICI ring via collective_permute."""
+    a = np.zeros((m, m))
+    for i in range(m):
+        a[i, (i + 1) % m] = weight
+        a[(i + 1) % m, i] = weight
+    return TaskGraph(a)
+
+
+def band_graph(m: int, bandwidth: int, weight: float = 1.0) -> TaskGraph:
+    """Each task connected to its ``bandwidth`` nearest ring neighbours each
+    side — the torus-embeddable generalization of the ring."""
+    a = np.zeros((m, m))
+    for i in range(m):
+        for off in range(1, bandwidth + 1):
+            j = (i + off) % m
+            a[i, j] = a[j, i] = weight
+    return TaskGraph(a)
+
+
+def complete_graph(m: int, weight: float = 1.0) -> TaskGraph:
+    """Fully-connected graph — Evgeniou & Pontil (2004) 'all tasks similar'."""
+    a = weight * (np.ones((m, m)) - np.eye(m))
+    return TaskGraph(a)
+
+
+def cluster_graph(labels: np.ndarray, weight: float = 1.0) -> TaskGraph:
+    """Block graph connecting tasks within the same cluster."""
+    labels = np.asarray(labels)
+    a = weight * (labels[:, None] == labels[None, :]).astype(np.float64)
+    np.fill_diagonal(a, 0.0)
+    return TaskGraph(a)
+
+
+def disconnected_graph(m: int) -> TaskGraph:
+    """No edges — multi-task degenerates to purely local learning."""
+    return TaskGraph(np.zeros((m, m)))

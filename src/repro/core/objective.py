@@ -1,0 +1,162 @@
+"""Multi-task objectives: losses, empirical risk, and the regularized ERM.
+
+Layout convention (differs from the paper's d x m matrix W, chosen because it
+is the natural sharded layout on a device mesh): tasks are stacked on the
+leading axis.
+
+    W : (m, d)        row i = task i's predictor
+    X : (m, n, d)     n samples of dimension d per task
+    y : (m, n)        targets
+
+All losses are written per-sample so that Lipschitz/smoothness constants used
+by the paper's stepsize rules can be derived mechanically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import TaskGraph
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- losses
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Per-sample instantaneous loss ell(w, (x, y)) with its constants."""
+
+    name: str
+    fn: Callable[[Array, Array], Array]  # (pred, target) -> scalar-per-sample
+
+    def per_task_risk(self, w: Array, x: Array, y: Array) -> Array:
+        """Mean loss of a single task: w (d,), x (n, d), y (n,)."""
+        pred = x @ w
+        return jnp.mean(self.fn(pred, y))
+
+    def empirical_risk(self, w_stack: Array, x: Array, y: Array) -> Array:
+        """F_hat(W) = (1/m) sum_i F_hat_i(w_i); shapes (m,d),(m,n,d),(m,n)."""
+        risks = jax.vmap(self.per_task_risk)(w_stack, x, y)
+        return jnp.mean(risks)
+
+    def per_task_risks(self, w_stack: Array, x: Array, y: Array) -> Array:
+        return jax.vmap(self.per_task_risk)(w_stack, x, y)
+
+    def smoothness(self, x: Array) -> float:
+        """Data-dependent smoothness beta_i of F_hat_i for this loss.
+
+        For squared loss: beta = 2 * lam_max(X^T X / n); for logistic:
+        beta = lam_max(X^T X / n) / 4. Computed per task, max over tasks
+        (the paper's beta_F = max_i beta_i).
+        """
+        x_np = np.asarray(x, dtype=np.float64)
+        if x_np.ndim == 2:
+            x_np = x_np[None]
+        betas = []
+        for xt in x_np:
+            gram = xt.T @ xt / xt.shape[0]
+            lam = float(np.linalg.eigvalsh(gram)[-1])
+            betas.append(lam * self._curvature())
+        return max(betas)
+
+    def _curvature(self) -> float:
+        if self.name == "squared":
+            return 2.0
+        if self.name == "logistic":
+            return 0.25
+        raise NotImplementedError(self.name)
+
+
+def _sq(pred, target):
+    return (pred - target) ** 2
+
+
+def _logistic(pred, target):
+    # target in {-1, +1}
+    return jnp.log1p(jnp.exp(-target * pred))
+
+
+SQUARED = Loss("squared", _sq)
+LOGISTIC = Loss("logistic", _logistic)
+
+
+# --------------------------------------------------------------- objectives
+@dataclasses.dataclass(frozen=True)
+class MultiTaskProblem:
+    """The regularized ERM problem (2) plus its population counterpart."""
+
+    graph: TaskGraph
+    loss: Loss
+    eta: float
+    tau: float
+
+    # ---- empirical ----
+    def erm_objective(self, w_stack: Array, x: Array, y: Array) -> Array:
+        """F_hat(W) + R(W) — the objective of eq. (2)."""
+        return self.loss.empirical_risk(w_stack, x, y) + self.graph.penalty(
+            w_stack, self.eta, self.tau
+        )
+
+    def erm_grad(self, w_stack: Array, x: Array, y: Array) -> Array:
+        return jax.grad(self.erm_objective)(w_stack, x, y)
+
+    def loss_grad(self, w_stack: Array, x: Array, y: Array) -> Array:
+        """∇ F_hat(W) only (no regularizer)."""
+        return jax.grad(self.loss.empirical_risk)(w_stack, x, y)
+
+    def reg_grad(self, w_stack: Array) -> Array:
+        return self.graph.penalty_grad(w_stack, self.eta, self.tau)
+
+    # ---- exact solve (squared loss only; the 'Centralized' baseline) ----
+    def closed_form_solution(self, x: Array, y: Array) -> Array:
+        """Solve (2) exactly for the squared loss via the (md x md) normal
+        equations, exploiting the Kronecker structure.
+
+        Objective per task block:
+            (1/m) * (1/n)||X_i w_i - y_i||^2 + (1/2m)(eta I + tau L)-quadratic
+        Stationarity: (2/n) X_i^T X_i w_i + eta w_i + tau (L W)_i
+                      = (2/n) X_i^T y_i
+        Solved as a single linear system over vec(W).
+        """
+        if self.loss.name != "squared":
+            raise NotImplementedError("closed form only for squared loss")
+        x_np = np.asarray(x, dtype=np.float64)
+        y_np = np.asarray(y, dtype=np.float64)
+        m, n, d = x_np.shape
+        lap = self.graph.laplacian()
+        # Block system: A_blocks[i] = (2/n) X_i^T X_i + eta I, coupling tau*L.
+        big = np.kron(self.tau * lap, np.eye(d))
+        for i in range(m):
+            gram = (2.0 / n) * x_np[i].T @ x_np[i] + self.eta * np.eye(d)
+            big[i * d : (i + 1) * d, i * d : (i + 1) * d] += gram
+        rhs = np.concatenate([(2.0 / n) * x_np[i].T @ y_np[i] for i in range(m)])
+        w = np.linalg.solve(big, rhs).reshape(m, d)
+        return jnp.asarray(w)
+
+    # ---- constants for stepsize rules ----
+    def smoothness_loss(self, x: Array) -> float:
+        """beta_F = max_i beta_i — smoothness of each local empirical loss."""
+        return self.loss.smoothness(x)
+
+    def smoothness_reg(self) -> float:
+        """beta_R * m = eta + tau * lambda_m — smoothness of m*R(W)."""
+        return self.eta + self.tau * self.graph.lambda_max
+
+
+def local_ridge_solution(x: Array, y: Array, reg: float) -> Array:
+    """The 'Local' baseline: per-task ridge regression, no communication.
+
+    min_w (1/n)||X_i w - y_i||^2 + (reg/2)||w||^2, solved in closed form.
+    """
+    x_np = np.asarray(x, dtype=np.float64)
+    y_np = np.asarray(y, dtype=np.float64)
+    m, n, d = x_np.shape
+    out = np.zeros((m, d))
+    for i in range(m):
+        gram = (2.0 / n) * x_np[i].T @ x_np[i] + reg * np.eye(d)
+        out[i] = np.linalg.solve(gram, (2.0 / n) * x_np[i].T @ y_np[i])
+    return jnp.asarray(out)

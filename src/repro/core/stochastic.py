@@ -1,0 +1,238 @@
+"""Stochastic algorithms of Section 4 (fresh minibatch per iteration).
+
+* ``ssr`` — accelerated minibatch SGD in U-space (Algorithm 2 / AC-SA of
+  Lan 2012), Theorem 3 stepsizes.
+* ``sol`` — stochastic "optimize the loss" (eq. (11)): neighbor mixing +
+  local prox on a fresh minibatch, optionally Nesterov-accelerated ("we
+  implemented the accelerated version of this simple algorithm").
+* ``minibatch_prox`` — the sample-efficient Algorithm 3 (Appendix E):
+  outer minibatch-prox in U-space, inner accelerated prox-gradient with
+  warm starts (Appendix F).
+
+A *sampler* is a callable ``sample_fn(key, b) -> (x, y)`` with shapes
+(m, b, d), (m, b) — either fresh draws from the population (true stochastic
+setting) or uniform draws from a fixed training set (the SSR/SOL curves of
+the ERM experiment).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import RunResult, prox_squared_loss, prox_gd
+from repro.core.objective import MultiTaskProblem
+from repro.core import theory
+
+Array = jax.Array
+Sampler = Callable[[Array, int], tuple[Array, Array]]
+
+
+def minibatch_sampler(x: Array, y: Array) -> Sampler:
+    """Uniform-with-replacement sampler over a fixed training set."""
+    n = x.shape[1]
+
+    def sample(key: Array, b: int):
+        idx = jax.random.randint(key, (x.shape[0], b), 0, n)
+        xb = jnp.take_along_axis(x, idx[:, :, None], axis=1)
+        yb = jnp.take_along_axis(y, idx, axis=1)
+        return xb, yb
+
+    return sample
+
+
+# ------------------------------------------------------------ SSR (Alg. 2)
+def ssr(
+    problem: MultiTaskProblem,
+    sample_fn: Sampler,
+    batch_size: int,
+    num_iters: int,
+    key: Array,
+    eval_fn: Callable[[Array], Array],
+    beta_f: float,
+    B: float,
+    sigma: float | None = None,
+    w0: Array | None = None,
+    d: int | None = None,
+) -> RunResult:
+    """Accelerated minibatch SGD (AC-SA), Algorithm 2, W-space form.
+
+    W_md  = th^{-1} W + (1-th^{-1}) W_ag
+    W    <- W - a^{t+1} * M^{-1} G^{t+1}(W_md)     (per-machine grads G)
+    W_ag  = th^{-1} W + (1-th^{-1}) W_ag
+    with th^{t+1} = (t+1)/2 and alpha from Theorem 3.
+    """
+    m = problem.graph.m
+    eta, tau = problem.eta, problem.tau
+    if sigma is None:
+        # Lemma 4 bound, scaled to per-machine gradients (the m* convention):
+        # variance of the mixed per-machine gradient stack.
+        sigma = m * np.sqrt(theory.gradient_variance_bound(problem.graph, B, 1.0, 1.0))
+        sigma = max(float(sigma), 1e-6)
+    m_inv = jnp.asarray(problem.graph.metric_inverse(eta, tau), jnp.float32)
+    theta, alpha = theory.theorem3_stepsizes(num_iters, m, B, beta_f, sigma)
+    theta = jnp.asarray(theta, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    # The Theorem-3 alpha is stated for the U-space (1/m-scaled) gradient;
+    # our G is the per-machine stack (m x larger), so rescale.
+    alpha = alpha / m
+
+    if d is None:
+        xb, _ = sample_fn(key, 1)
+        d = xb.shape[-1]
+    w_init = jnp.zeros((m, d)) if w0 is None else w0
+
+    def step(state, t):
+        w, w_ag, k = state
+        k, sub = jax.random.split(k)
+        th_inv = 1.0 / theta[t]
+        w_md = th_inv * w + (1.0 - th_inv) * w_ag
+        xb, yb = sample_fn(sub, batch_size)
+        g = m * problem.loss_grad(w_md, xb, yb)
+        w_new = w - alpha[t] * (m_inv @ g)
+        w_ag_new = th_inv * w_new + (1.0 - th_inv) * w_ag
+        return (w_new, w_ag_new, k), eval_fn(w_ag_new)
+
+    (wf, wagf, _), trace = jax.lax.scan(
+        step, (w_init, w_init, key), jnp.arange(num_iters)
+    )
+    return RunResult(wagf, trace)
+
+
+# --------------------------------------------------------------- SOL (4.2)
+def sol(
+    problem: MultiTaskProblem,
+    sample_fn: Sampler,
+    batch_size: int,
+    num_iters: int,
+    key: Array,
+    eval_fn: Callable[[Array], Array],
+    stepsize: float | None = None,
+    accelerated: bool = True,
+    inner_steps: int = 30,
+    beta_local: float | None = None,
+    w0: Array | None = None,
+    d: int | None = None,
+) -> RunResult:
+    """Stochastic "optimize the loss", eq. (11): per iteration one round of
+    neighbor-only communication, then a local prox on a *fresh* minibatch."""
+    m = problem.graph.m
+    eta, tau = problem.eta, problem.tau
+    lam_max = problem.graph.lambda_max
+    alpha = stepsize if stepsize is not None else 1.0 / (eta + tau * lam_max)
+    mix = jnp.asarray(problem.graph.bol_mixing(eta, tau, alpha), jnp.float32)
+    if accelerated:
+        kappa = (eta + tau * lam_max) / eta
+        momentum = (np.sqrt(kappa) - 1.0) / (np.sqrt(kappa) + 1.0)
+    else:
+        momentum = 0.0
+
+    if d is None:
+        xb, _ = sample_fn(key, 1)
+        d = xb.shape[-1]
+    w_init = jnp.zeros((m, d)) if w0 is None else w0
+
+    def local_prox(v, xb, yb):
+        if problem.loss.name == "squared":
+            return prox_squared_loss(v, xb, yb, alpha)
+        grad_fn = lambda u: m * problem.loss_grad(u, xb, yb)
+        bl = beta_local if beta_local is not None else 1.0
+        return prox_gd(v, grad_fn, alpha, bl, inner_steps)
+
+    def step(state, _):
+        w, w_prev, k = state
+        k, sub = jax.random.split(k)
+        yv = w + momentum * (w - w_prev)
+        mixed = mix @ yv
+        xb, yb = sample_fn(sub, batch_size)
+        w_new = local_prox(mixed, xb, yb)
+        return (w_new, w, k), eval_fn(w_new)
+
+    (wf, _, _), trace = jax.lax.scan(
+        step, (w_init, w_init, key), jnp.arange(num_iters)
+    )
+    return RunResult(wf, trace)
+
+
+# ------------------------------------------------- minibatch-prox (Alg. 3)
+def minibatch_prox(
+    problem: MultiTaskProblem,
+    sample_fn: Sampler,
+    batch_size: int,
+    num_outer: int,
+    key: Array,
+    eval_fn: Callable[[Array], Array],
+    B: float,
+    S: float,
+    L: float,
+    inner_iters: int = 20,
+    gamma: float | None = None,
+    d: int | None = None,
+) -> RunResult:
+    """Algorithm 3: distributed minibatch prox.
+
+    Outer: W^{t+1} ~ argmin (gamma/2) tr((W-W^t) M (W-W^t)^T) + F_hat^{t+1}(W)
+    Inner: accelerated prox-gradient ProxGrad(g = gamma-quadratic, h = local
+    loss) with warm start at W^t (Appendix F). Output = average of outer
+    iterates.
+    """
+    graph = problem.graph
+    m = graph.m
+    if gamma is None:
+        r = theory.rho(graph, B, S)
+        gamma = (
+            2.0
+            * np.sqrt(num_outer / batch_size)
+            * L
+            * np.sqrt(1.0 + m * r)
+            / (m**1.5 * B)
+        )
+        gamma = float(max(gamma, 1e-8))
+    # M with the Cor.2 ratio tau/eta = m B^2 / S^2 (Appendix D/E convention).
+    m_mat = jnp.asarray(
+        np.eye(m) + (m * B**2 / S**2) * graph.laplacian(), jnp.float32
+    )
+    lam_max = graph.lambda_max
+    beta_inner = gamma * (1.0 + m * B**2 / S**2 * lam_max)  # smoothness of g
+    mom = (np.sqrt(beta_inner) - np.sqrt(gamma)) / (np.sqrt(beta_inner) + np.sqrt(gamma))
+
+    if d is None:
+        xb, _ = sample_fn(key, 1)
+        d = xb.shape[-1]
+
+    def inner_solve(w_t, xb, yb):
+        """Accelerated prox-grad on f(W) = g(W) + h(W), prox-step on h."""
+
+        def body(state, _):
+            u, u_prev = state
+            yv = u + mom * (u - u_prev)
+            g_grad = gamma * (m_mat @ (yv - w_t))  # task-axis mixing, (m,m)@(m,d)
+            v = yv - g_grad / beta_inner
+            # prox of h = F_hat = (1/m) sum_i (1/b)||X_i u - y_i||^2 at
+            # parameter beta: per machine (beta/2)||u-v||^2 + (1/m)(1/b)||.||^2
+            # => prox_squared_loss alpha = 1/(m * beta)
+            if problem.loss.name == "squared":
+                u_new = prox_squared_loss(v, xb, yb, 1.0 / (m * beta_inner))
+            else:
+                grad_fn = lambda z: problem.loss_grad(z, xb, yb)
+                u_new = prox_gd(v, grad_fn, 1.0 / beta_inner, 1.0, 10)
+            return (u_new, u), None
+
+        (u, _), _ = jax.lax.scan(body, (w_t, w_t), None, length=inner_iters)
+        return u
+
+    def outer(state, _):
+        w, w_sum, k = state
+        k, sub = jax.random.split(k)
+        xb, yb = sample_fn(sub, batch_size)
+        w_new = inner_solve(w, xb, yb)
+        w_sum = w_sum + w_new
+        return (w_new, w_sum, k), eval_fn(w_new)
+
+    w0 = jnp.zeros((m, d))
+    (wf, w_sum, _), trace = jax.lax.scan(
+        outer, (w0, jnp.zeros_like(w0), key), None, length=num_outer
+    )
+    return RunResult(w_sum / num_outer, trace)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import ClusteredTasks, generate_clustered_tasks
+from repro.data.tokens import synthetic_lm_batch, TokenPipeline

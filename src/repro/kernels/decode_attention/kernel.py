@@ -1,0 +1,133 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Serving's hot spot (decode_32k / long_500k shapes): per token and layer the
+whole KV cache (B x S x KVH x hd) streams HBM -> VMEM exactly once while
+scores/outputs accumulate on-chip with an online softmax — arithmetic
+intensity is O(G) flops/byte, so the roofline is HBM bandwidth and the kernel
+objective is "touch every cache byte once".
+
+Grid (B, KVH, S/BLK_S); the sequence axis is innermost (sequential on TPU),
+carrying running (max, sum, acc) in VMEM scratch:
+
+  s        = q @ k_blk^T * scale          (G, BLK_S)   MXU
+  m_new    = max(m, rowmax(s))
+  p        = exp(s - m_new);  alpha = exp(m - m_new)
+  l        = alpha * l + rowsum(p)
+  acc      = alpha * acc + p @ v_blk      (G, hd)      MXU
+  (last block)  out = acc / l
+
+GQA group dim G rides along as the left matmul dim so every query group
+shares one streaming pass over its KV head. Causal/sliding-window masking is
+applied from the block's absolute positions vs the decoded position ``pos``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_s, scale, window):
+    sb = pl.program_id(2)
+    num_sb = pl.num_programs(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (G, hd)
+    k = k_ref[0, :, 0, :]  # (BLK_S, hd)
+    v = v_ref[0, :, 0, :]  # (BLK_S, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, BLK_S)
+
+    pos = pos_ref[0, 0]
+    kv_idx = sb * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_idx <= pos
+    if window is not None:
+        mask &= kv_idx > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[:, 0]  # (G,)
+    l_old = l_ref[:, 0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_old - m_new)  # (G,)
+    p = jnp.exp(s - m_new[:, None])  # (G, BLK_S)
+    l_new = alpha * l_old + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (G, hd)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(sb == num_sb - 1)
+    def _fin():
+        l = l_ref[:, 0]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "window", "interpret")
+)
+def decode_attention_pallas(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k: jax.Array,  # (B, S, KVH, hd)
+    v: jax.Array,  # (B, S, KVH, hd)
+    pos: jax.Array,  # () int32
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    window: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    b, kvh, g, hd = q.shape
+    s = k.shape[1]
+    g_pad = (-g) % 8
+    s_pad = (-s) % block_s
+    if g_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad), (0, 0)))
+    if s_pad:
+        # padded positions are masked off via kv_idx > pos
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    gp, sp = g + g_pad, s + s_pad
+    scale = float(1.0 / (hd ** 0.5))
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, block_s=block_s, scale=scale, window=window
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, sp // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, hh, ss: (0, 0)),
+            pl.BlockSpec((1, gp, hd), lambda bb, hh, ss: (bb * kvh + hh, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, gp, hd), lambda bb, hh, ss: (bb * kvh + hh, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, gp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((gp, hd), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q.reshape(b * kvh, gp, hd), k, v)
+    return out.reshape(b, kvh, gp, hd)[:, :, :g, :]

@@ -1,0 +1,26 @@
+"""Public op: decode_attention — accepts model-layout tensors
+(q (B, 1, H, hd), caches (B, S, KVH, hd)) and dispatches to the Pallas
+kernel (interpret mode off-TPU)."""
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KVH, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+    block_s: int = 256,
+) -> jax.Array:
+    b, one, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    qg = q.reshape(b, kvh, h // kvh, hd)
+    on_tpu = jax.default_backend() == "tpu"
+    out = decode_attention_pallas(
+        qg, k_cache, v_cache, pos,
+        block_s=block_s, window=window, interpret=not on_tpu,
+    )
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash-decode attention (grouped GQA, causal/windowed)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k: jax.Array,  # (B, S, KVH, hd)
+    v: jax.Array,  # (B, S, KVH, hd)
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kv_pos = jnp.arange(k.shape[1])
+    mask = kv_pos <= pos
+    if window is not None:
+        mask &= kv_pos > pos - window
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

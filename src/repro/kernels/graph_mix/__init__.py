@@ -1,0 +1,2 @@
+from repro.kernels.graph_mix.ops import graph_mix
+from repro.kernels.graph_mix.ref import graph_mix_reference

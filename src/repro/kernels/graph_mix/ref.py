@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the graph mixing contraction."""
+import jax
+import jax.numpy as jnp
+
+
+def graph_mix_reference(mu: jax.Array, theta: jax.Array) -> jax.Array:
+    """out[i] = sum_k mu[k, i] theta[k]  ==  mu^T @ theta (f32 accumulate)."""
+    out = jnp.einsum(
+        "ki,kd->id", mu.astype(jnp.float32), theta.astype(jnp.float32)
+    )
+    return out.astype(theta.dtype)

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation. This is the only thing the dry-run feeds
+through ``.lower()``.
+
+Input shapes (assignment):
+  train_4k     seq=4096,   global_batch=256   -> train_step
+  prefill_32k  seq=32768,  global_batch=32    -> prefill (serve)
+  decode_32k   seq=32768,  global_batch=128   -> decode_step (serve, 1 token)
+  long_500k    seq=524288, global_batch=1     -> decode_step, sub-quadratic
+                                                 archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Model-input ShapeDtypeStructs for one (arch, shape) pair."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    batch: dict = {"task_ids": SDS((b,), jnp.int32)}
+    if cfg.input_mode == "audio":
+        batch["tokens"] = SDS((b, s, cfg.num_codebooks), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = SDS((b, s, cfg.num_codebooks), jnp.int32)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = SDS((b, s), jnp.int32)
+        if cfg.input_mode == "vlm":
+            batch["vision_embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+            batch["vision_mask"] = SDS((b, s), jnp.bool_)
+    return batch
+
+
+def abstract_tree(tree):
+    """Arrays -> ShapeDtypeStructs (used to avoid materializing params)."""
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)

@@ -1,0 +1,96 @@
+"""Training launcher: pick an architecture config, build the mesh + sharded
+train step (AdamW + graph multi-task mixed update), and run.
+
+On this CPU container only smoke-size runs execute
+(``--smoke``, the default); full configs are for the pod target — use
+``repro.launch.dryrun`` to validate them without hardware.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --smoke --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_5_14b --smoke \
+      --steps 50 --microbatch 2 --ckpt /tmp/ckpt.npz
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs import get
+from repro.core import GraphMultiTask, band_graph
+from repro.data.tokens import TokenPipeline
+from repro.models import TransformerLM
+from repro.optim import adamw, cosine_schedule
+from repro.train.trainer import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--eta", type=float, default=0.1)
+    ap.add_argument("--tau", type=float, default=1.0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get(args.arch, smoke=args.smoke)
+    if args.batch % cfg.num_tasks != 0:
+        cfg = dataclasses.replace(cfg, num_tasks=max(1, args.batch // 2))
+    model = TransformerLM(cfg)
+    n_params = sum(
+        int(np.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        )
+    )
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, {cfg.num_tasks} tasks, "
+          f"{jax.device_count()} device(s)")
+
+    gmt = GraphMultiTask(band_graph(cfg.num_tasks, 1), eta=args.eta, tau=args.tau)
+    opt = adamw(cosine_schedule(args.lr, warmup=max(args.steps // 10, 1),
+                                total=args.steps))
+    step_fn = jax.jit(make_train_step(model, opt, multitask=gmt,
+                                      microbatches=args.microbatch))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, num_tasks=cfg.num_tasks)
+
+    t0 = time.perf_counter()
+    for i, batch in enumerate(pipe):
+        if i >= args.steps:
+            break
+        import jax.numpy as jnp
+
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.input_mode == "audio":
+            batch["tokens"] = jnp.repeat(
+                batch["tokens"][..., None], cfg.num_codebooks, -1
+            ) % cfg.vocab_size
+            batch["labels"] = jnp.repeat(
+                batch["labels"][..., None], cfg.num_codebooks, -1
+            ) % cfg.vocab_size
+        if cfg.input_mode == "vlm":
+            b, s = batch["tokens"].shape
+            batch["vision_embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+            batch["vision_mask"] = jnp.zeros((b, s), bool)
+        state, metrics = step_fn(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt:
+        save_pytree(args.ckpt, state.params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Attention: GQA (± QKV bias, ± sliding window) and DeepSeek-style MLA.
+
+Full-sequence (train / prefill) attention is query-chunked (lax.scan over
+query blocks) so peak score memory is (block x kv_len) instead of
+(seq x seq) — the pure-JAX analogue of flash attention; the TPU Pallas
+decode kernel lives in repro/kernels/decode_attention.py and is numerically
+checked against ``decode_attend`` here.
+
+Shapes: x (B, S, d); q (B, S, H, hd); kv (B, S, KVH, hd); caches are
+(B, max_seq, KVH, hd) ring-less buffers written at ``pos``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, matmul
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------- GQA parameters
+def init_gqa(key, d: int, n_heads: int, n_kv: int, head_dim: int, qkv_bias: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d, n_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d, n_kv * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_project(params, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    q = matmul(x, params["wq"])
+    k = matmul(x, params["wk"])
+    v = matmul(x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        q.reshape(b, s, n_heads, head_dim),
+        k.reshape(b, s, n_kv, head_dim),
+        v.reshape(b, s, n_kv, head_dim),
+    )
+
+
+# ------------------------------------------------------- full-seq attention
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KVH, hd) -> (B, S, H, hd) by repeating groups."""
+    b, s, kvh, hd = k.shape
+    rep = n_heads // kvh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def causal_attend(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    sliding_window: int | None = None,
+    q_chunk: int = 1024,
+) -> Array:
+    """Query-chunked causal (optionally windowed) attention.
+
+    q: (B, S, H, hd); k, v: (B, S, KVH, hd). Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    hd_v = v.shape[-1]  # may differ from hd (MLA: qk dims != v dims)
+    kvh = k.shape[2]
+    g = h // kvh  # GQA group size — kept as an explicit einsum dim so the
+    # partitioner never reshards the KV tensor to expanded heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk != 0:  # fall back to one chunk when not divisible
+        q_chunk = s
+    n_chunks = s // q_chunk
+    # (B, n_chunks, qc, KVH, G, hd)
+    qg = q.reshape(b, n_chunks, q_chunk, kvh, g, hd)
+    kv_pos = jnp.arange(s)
+
+    def one_chunk(carry, ci):
+        qi = qg[:, ci]  # (B, qc, KVH, G, hd)
+        scores = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qi, k, preferred_element_type=jnp.float32
+        ) * scale  # (B, KVH, G, qc, S)
+        q_pos = ci * q_chunk + jnp.arange(q_chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if sliding_window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgqs,bskd->bqkgd", w.astype(q.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return carry, out.astype(q.dtype)  # (B, qc, KVH, G, hd_v)
+
+    _, outs = jax.lax.scan(one_chunk, 0, jnp.arange(n_chunks))
+    # (n_chunks, B, qc, KVH, G, hd_v) -> (B, S, H, hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd_v)
+    return out
+
+
+def decode_attend(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    pos: Array,
+    *,
+    sliding_window: int | None = None,
+) -> Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, hd); caches: (B, max_seq, KVH, hd); pos: () current index
+    (the new token's position; cache already contains it). Returns (B,1,H,hd).
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(b, kvh, g, hd)
+    # NOTE: operand-dtype dots on purpose — requesting an f32 dot against the
+    # bf16 cache makes XLA-CPU hoist a full f32 convert of the scanned cache
+    # stack out of the layer loop (2x cache memory); the TPU MXU takes bf16
+    # operands natively with f32 accumulation. Softmax itself runs in f32.
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores * scale  # (B, KVH, G, S)
+    kv_pos = jnp.arange(k_cache.shape[1])
+    mask = kv_pos <= pos
+    if sliding_window is not None:
+        mask &= kv_pos > pos - sliding_window
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(q.dtype), v_cache)
+    return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
+
+
+# ----------------------------------------------------------------- MLA
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    n_heads: int
+    qk_nope: int  # per-head non-rotary key/query dims
+    qk_rope: int  # shared rotary dims
+    v_dim: int
+    kv_lora: int
+
+
+def init_mla(key, d: int, dims: MLADims, dtype):
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv, r = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_dim, dims.kv_lora
+    return {
+        "wq": dense_init(ks[0], (d, h * (dn + dr)), dtype=dtype),
+        "w_dkv": dense_init(ks[1], (d, r), dtype=dtype),  # compress
+        "w_krope": dense_init(ks[2], (d, dr), dtype=dtype),  # shared rope key
+        "w_uk": dense_init(ks[3], (r, h * dn), dtype=dtype),  # up: keys
+        "w_uv": dense_init(ks[4], (r, h * dv), dtype=dtype),  # up: values
+        "wo": dense_init(ks[5], (h * dv, d), dtype=dtype),
+    }
+
+
+def mla_full(params, x, dims: MLADims, positions, theta, q_chunk=1024):
+    """Materialized MLA for train/prefill. Returns (out, (c_kv, k_rope))."""
+    b, s, d = x.shape
+    h, dn, dr, dv = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_dim
+    q = matmul(x, params["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    c_kv = matmul(x, params["w_dkv"])  # (B, S, r)
+    k_rope = apply_rope(
+        matmul(x, params["w_krope"])[:, :, None, :], positions, theta
+    )  # (B, S, 1, dr), shared across heads
+    k_nope = matmul(c_kv, params["w_uk"]).reshape(b, s, h, dn)
+    v = matmul(c_kv, params["w_uv"]).reshape(b, s, h, dv)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1
+    )
+    out = causal_attend(q_full, k_full, v, q_chunk=q_chunk)
+    out = matmul(out.reshape(b, s, h * dv), params["wo"])
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, dims: MLADims, c_cache, krope_cache, pos, theta):
+    """Absorbed-matrix MLA decode: score/value contractions happen in the
+    compressed c_kv space, so the per-token cache is (kv_lora + qk_rope) —
+    the whole point of MLA. x: (B, 1, d); caches already contain this token.
+    """
+    b, _, d = x.shape
+    h, dn, dr, dv, r = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_dim, dims.kv_lora
+    q = matmul(x, params["wq"]).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, jnp.full((b, 1), pos), theta)
+    # absorb W_uk into the query: q' = q_nope @ W_uk^T per head -> r-dim
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+    scores = (
+        jnp.einsum("bqhr,bkr->bhqk", q_c, c_cache.astype(jnp.float32))
+        + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32))
+    ) * scale
+    mask = jnp.arange(c_cache.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))  # (B,1,H,r)
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = matmul(out.reshape(b, 1, h * dv), params["wo"])
+    return out

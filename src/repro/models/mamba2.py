@@ -1,0 +1,150 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked for TPU.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+work *within* chunks (MXU-friendly (c x c) matmuls) plus a `lax.scan` over
+chunk states — O(S c) instead of O(S^2). Decode is the O(1) recurrence.
+
+Per-layer state: conv buffer (B, kernel-1, conv_dim) and SSM state
+(B, n_heads, head_dim, d_state).
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): single B/C group (n_groups=1), no bias terms, norm-before-gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul, rms_norm
+
+Array = jax.Array
+
+CONV_K = 4  # depthwise causal conv kernel width
+
+
+def dims(d_model: int, d_state: int, head_dim: int = 64, expand: int = 2):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state  # conv over [x, B, C]
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, d_model: int, d_state: int, head_dim: int, dtype):
+    d_inner, n_heads, conv_dim = dims(d_model, d_state, head_dim)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (ds), C (ds), dt (nh)]
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), dtype=dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, conv_dim), dtype=dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_gain": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(params, x, d_model, d_state, head_dim):
+    d_inner, n_heads, conv_dim = dims(d_model, d_state, head_dim)
+    proj = matmul(x, params["w_in"])
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + conv_dim]
+    dt = proj[..., d_inner + conv_dim :]  # (.., nh)
+    return z, xbc, dt, d_inner, n_heads
+
+
+def _causal_conv(xbc: Array, conv_w: Array) -> Array:
+    """Depthwise causal conv over time. xbc: (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, k : k + xbc.shape[1], :] * conv_w[k][None, None, :]
+        for k in range(CONV_K)
+    )
+    return jax.nn.silu(out)
+
+
+def mamba2_full(params, x, *, d_state: int, head_dim: int, chunk: int = 256):
+    """Full-sequence chunked SSD. x: (B, S, d_model) -> (y, final_state).
+
+    final_state: (conv_tail (B, K-1, conv_dim), ssm (B, nh, hd, ds)).
+    """
+    bsz, s, d_model = x.shape
+    z, xbc, dt, d_inner, nh = _split_proj(params, x, d_model, d_state, head_dim)
+    conv_tail = xbc[:, -(CONV_K - 1) :, :] if s >= CONV_K - 1 else jnp.pad(
+        xbc, ((0, 0), (CONV_K - 1 - s, 0), (0, 0))
+    )
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xs = xbc[..., :d_inner].reshape(bsz, s, nh, head_dim)
+    b_in = xbc[..., d_inner : d_inner + d_state]  # (B, S, ds)
+    c_in = xbc[..., d_inner + d_state :]  # (B, S, ds)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(params["a_log"])  # (nh,)
+    da = dt * a[None, None, :]  # log-decay per step, (B, S, nh)
+
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def r(t):  # reshape to (nc, B, c, ...) for the chunk scan
+        return t.reshape((bsz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, b_c, c_c, dt_c, da_c = map(
+        lambda t: r(t.astype(jnp.float32)), (xs, b_in, c_in, dt, da)
+    )
+
+    def process_chunk(s_prev, inp):
+        """One chunk: quadratic intra-chunk term + contribution of the
+        incoming state; emits the chunk's outputs and the updated state."""
+        xs_i, b_i, c_i, dt_i, da_i = inp
+        cum = jnp.cumsum(da_i, axis=1)  # (B, c, nh)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, t, s', nh)
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", c_i, b_i)  # single B/C group
+        w_mat = cb[..., None] * l_mat * dt_i[:, None, :, :]  # (B, t, s', nh)
+        y_intra = jnp.einsum("btsh,bshd->bthd", w_mat, xs_i)
+        y_inter = jnp.einsum("btn,bth,bhdn->bthd", c_i, jnp.exp(cum), s_prev)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B, c, nh)
+        st = jnp.einsum(
+            "bsh,bsn,bshd->bhdn", decay_to_end * dt_i, b_i, xs_i
+        )
+        s_new = s_prev * jnp.exp(cum[:, -1, :])[:, :, None, None] + st
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((bsz, nh, head_dim, d_state), jnp.float32)
+    s_final, y_chunks = jax.lax.scan(
+        process_chunk, s0, (xs_c, b_c, c_c, dt_c, da_c)
+    )
+    y = y_chunks.swapaxes(0, 1).reshape(bsz, s, nh, head_dim)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_gain"])
+    return matmul(y, params["w_out"]), (conv_tail, s_final)
+
+
+def mamba2_step(params, x, state, *, d_state: int, head_dim: int):
+    """Single-token decode. x: (B, 1, d_model); state = (conv_tail, ssm)."""
+    bsz, _, d_model = x.shape
+    conv_tail, ssm = state  # (B, K-1, conv_dim), (B, nh, hd, ds)
+    z, xbc, dt, d_inner, nh = _split_proj(params, x, d_model, d_state, head_dim)
+    window = jnp.concatenate([conv_tail, xbc], axis=1)  # (B, K, conv_dim)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    )[:, None, :]
+    new_tail = window[:, 1:, :]
+    xs = conv_out[..., :d_inner].reshape(bsz, nh, head_dim)
+    b_in = conv_out[:, 0, d_inner : d_inner + d_state]  # (B, ds)
+    c_in = conv_out[:, 0, d_inner + d_state :]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B, nh)
+    a = -jnp.exp(params["a_log"])
+    dec = jnp.exp(dt * a[None, :])  # (B, nh)
+    ssm_new = ssm * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhd->bhdn", dt, b_in.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhdn->bhd", c_in.astype(jnp.float32), ssm_new)
+    y = y + params["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_gain"])
+    return matmul(y, params["w_out"]), (new_tail, ssm_new)

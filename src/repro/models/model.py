@@ -1,0 +1,532 @@
+"""Config-driven LM assembly: dense / MoE / MLA / SSM / hybrid / VLM / audio.
+
+Layer stacks are grouped by the config's block ``pattern``: one ``lax.scan``
+over pattern periods (stacked params, O(1) HLO size in depth) plus an
+unstacked remainder stage. "shared_attn" blocks (Zamba2) reuse a single
+weight set across all periods via closure capture.
+
+Three entry points, all pure functions of (params, inputs):
+  * ``forward``      — full-sequence logits (training / evaluation).
+  * ``prefill``      — full-sequence + populated caches, last-token logits.
+  * ``decode_step``  — one token against caches at ``pos``.
+
+Multi-task personalization (the paper's technique) lives in ``params['task']``:
+per-task final-norm gain, lm-head bias and (MoE) router bias, all with a
+leading task axis that the launcher shards over the data mesh axis. The
+graph-mixed update is applied by `repro/train/trainer.py` via
+`repro.core.distributed.GraphMultiTask`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import MLADims
+from repro.models.layers import apply_mlp, apply_norm, dense_init, init_mlp, init_norm, matmul
+from repro.models.moe import apply_moe, init_moe
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ArchConfig
+    dtype: Any = jnp.float32
+
+    # ------------------------------------------------------------------ init
+    def _mla_dims(self) -> MLADims:
+        c = self.cfg
+        return MLADims(c.num_heads, c.qk_nope, c.qk_rope, c.v_head_dim, c.kv_lora)
+
+    def _init_block(self, key, kind: str) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            if c.use_mla:
+                att = attn_lib.init_mla(ks[0], c.d_model, self._mla_dims(), self.dtype)
+            else:
+                att = attn_lib.init_gqa(
+                    ks[0], c.d_model, c.num_heads, c.num_kv_heads, c.head_dim,
+                    c.qkv_bias, self.dtype,
+                )
+            p = {
+                "norm1": init_norm(c.norm_kind, c.d_model, self.dtype),
+                "attn": att,
+                "norm2": init_norm(c.norm_kind, c.d_model, self.dtype),
+            }
+            if kind == "attn_moe":
+                p["moe"] = init_moe(
+                    ks[1], c.d_model, c.d_ff, c.num_experts,
+                    c.num_shared_experts, self.dtype,
+                )
+            else:
+                p["mlp"] = init_mlp(ks[1], c.d_model, c.d_ff, c.mlp_kind, self.dtype)
+            return p
+        if kind == "mamba":
+            return {
+                "norm": init_norm(c.norm_kind, c.d_model, self.dtype),
+                "mamba": mamba_lib.init_mamba2(
+                    ks[0], c.d_model, c.ssm_state, c.ssm_head_dim, self.dtype
+                ),
+            }
+        if kind == "mlstm":
+            return {
+                "norm": init_norm(c.norm_kind, c.d_model, self.dtype),
+                "mlstm": xlstm_lib.init_mlstm(ks[0], c.d_model, c.num_heads),
+            }
+        if kind == "slstm":
+            return {
+                "norm": init_norm(c.norm_kind, c.d_model, self.dtype),
+                "slstm": xlstm_lib.init_slstm(ks[0], c.d_model, c.num_heads),
+            }
+        raise ValueError(kind)
+
+    def _stage_patterns(self) -> list[tuple[str, ...]]:
+        c = self.cfg
+        stages = []
+        if c.num_periods > 0:
+            stages.append(c.pattern)
+        if c.remainder:
+            stages.append(c.remainder)
+        return stages
+
+    def init(self, key) -> PyTree:
+        c = self.cfg
+        keys = jax.random.split(key, 8)
+        params: dict = {}
+        v_total = c.vocab_size * c.num_codebooks
+        if c.input_mode == "audio":
+            params["embed"] = dense_init(
+                keys[0], (c.num_codebooks, c.vocab_size, c.d_model), in_axis=2,
+                dtype=self.dtype,
+            )
+        else:
+            params["embed"] = dense_init(
+                keys[0], (c.vocab_size, c.d_model), in_axis=1, dtype=self.dtype
+            )
+        # stages
+        stage_params = []
+        kidx = 1
+        for si, pat in enumerate(self._stage_patterns()):
+            reps = c.num_periods if si == 0 and c.num_periods > 0 else 1
+            slots = {}
+            for j, kind in enumerate(pat):
+                if kind == "shared_attn":
+                    continue  # single copy, initialized below
+                skeys = jax.random.split(jax.random.fold_in(keys[1], kidx), reps)
+                kidx += 1
+                slots[f"slot{j}"] = jax.vmap(
+                    lambda k, kk=kind: self._init_block(k, kk)
+                )(skeys)
+            stage_params.append(slots)
+        params["stages"] = stage_params
+        if any(k == "shared_attn" for k in c.pattern):
+            params["shared_attn"] = self._init_block(keys[2], "shared_attn")
+        params["final_norm"] = init_norm(c.norm_kind, c.d_model, self.dtype)
+        if not c.tie_embeddings:
+            params["head"] = dense_init(keys[3], (c.d_model, v_total), dtype=self.dtype)
+        # ---- per-task personalization (paper's technique) ----
+        task: dict = {"head_bias": jnp.zeros((c.num_tasks, v_total), self.dtype)}
+        if c.norm_kind != "nonparam_ln":
+            task["final_gain"] = jnp.zeros((c.num_tasks, c.d_model), self.dtype)
+        if c.uses_moe:
+            task["router_bias"] = jnp.zeros((c.num_tasks, c.num_experts), self.dtype)
+        params["task"] = task
+        return params
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, batch) -> Array:
+        c = self.cfg
+        if c.input_mode == "audio":
+            toks = batch["tokens"]  # (B, S, K)
+            x = sum(
+                jnp.take(params["embed"][k], toks[:, :, k], axis=0)
+                for k in range(c.num_codebooks)
+            )
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            if c.input_mode == "vlm":
+                x = jnp.where(
+                    batch["vision_mask"][..., None],
+                    batch["vision_embeds"].astype(x.dtype),
+                    x,
+                )
+        return x
+
+    def _router_bias(self, params, batch, seq: int) -> Array | None:
+        if not self.cfg.uses_moe or "task_ids" not in batch:
+            return None
+        bias = jnp.take(params["task"]["router_bias"], batch["task_ids"], axis=0)
+        return jnp.broadcast_to(bias[:, None, :], (bias.shape[0], seq, bias.shape[1]))
+
+    def _logits(self, params, x, batch) -> Array:
+        c = self.cfg
+        x = apply_norm(c.norm_kind, x, params["final_norm"] or None)
+        if "final_gain" in params["task"] and "task_ids" in batch:
+            gain = jnp.take(params["task"]["final_gain"], batch["task_ids"], axis=0)
+            x = x * (1.0 + gain[:, None, :].astype(x.dtype))
+        if c.tie_embeddings:
+            head = params["embed"].T
+        else:
+            head = params["head"]
+        logits = jax.lax.dot_general(
+            x, head, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if "task_ids" in batch:
+            hb = jnp.take(params["task"]["head_bias"], batch["task_ids"], axis=0)
+            logits = logits + hb[:, None, :].astype(jnp.float32)
+        if c.logits_sharding is not None:
+            from jax.sharding import PartitionSpec
+
+            logits = jax.lax.with_sharding_constraint(
+                logits, PartitionSpec(*c.logits_sharding)
+            )
+        if c.num_codebooks > 1:
+            b, s, _ = logits.shape
+            logits = logits.reshape(b, s, c.num_codebooks, c.vocab_size)
+        return logits
+
+    # ----------------------------------------------------- full-seq blocks
+    def _block_full(self, kind, p, x, positions, router_bias, want_cache):
+        """Returns (x, cache_entry, aux). cache entry is the FULL-SEQ state
+        (attn: (k, v) over the sequence; ssm: final state)."""
+        c = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        cache = ()
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            h = apply_norm(c.norm_kind, x, p["norm1"] or None)
+            if c.use_mla:
+                out, (c_kv, k_rope) = attn_lib.mla_full(
+                    p["attn"], h, self._mla_dims(), positions, c.rope_theta,
+                    q_chunk=c.q_chunk,
+                )
+                if want_cache:
+                    cache = (c_kv, k_rope)
+            else:
+                q, k, v = attn_lib.gqa_project(
+                    p["attn"], h, c.num_heads, c.num_kv_heads, c.head_dim
+                )
+                q = attn_lib.apply_rope(q, positions, c.rope_theta)
+                k = attn_lib.apply_rope(k, positions, c.rope_theta)
+                o = attn_lib.causal_attend(
+                    q, k, v, sliding_window=c.sliding_window, q_chunk=c.q_chunk
+                )
+                b, s, _, _ = o.shape
+                out = matmul(o.reshape(b, s, c.num_heads * c.head_dim), p["attn"]["wo"])
+                if want_cache:
+                    cache = (k, v)
+            x = x + out
+            h = apply_norm(c.norm_kind, x, p["norm2"] or None)
+            if kind == "attn_moe":
+                ff, aux = apply_moe(
+                    p["moe"], h, top_k=c.top_k, capacity_factor=c.capacity_factor,
+                    router_bias=router_bias, groups=c.moe_groups,
+                    fsdp_gather=c.fsdp_gather_moe,
+                )
+            else:
+                ff = apply_mlp(p["mlp"], h, c.mlp_kind)
+            return x + ff, cache, aux
+        if kind == "mamba":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = mamba_lib.mamba2_full(
+                p["mamba"], h, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                chunk=c.mamba_chunk,
+            )
+            return x + out, (state if want_cache else ()), aux
+        if kind == "mlstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            if c.xlstm_parallel:
+                out, state = xlstm_lib.mlstm_chunkwise(
+                    p["mlstm"], h, n_heads=c.num_heads,
+                    chunk=c.xlstm_chunk or 64,
+                )
+            else:
+                out, state = xlstm_lib.mlstm_full(
+                    p["mlstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk
+                )
+            return x + out, (state if want_cache else ()), aux
+        if kind == "slstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = xlstm_lib.slstm_full(
+                p["slstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk
+            )
+            return x + out, (state if want_cache else ()), aux
+        raise ValueError(kind)
+
+    def _constrain(self, x):
+        spec = self.cfg.activation_sharding
+        if spec is not None:
+            from jax.sharding import PartitionSpec
+
+            x = jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+        return x
+
+    def _run_stages(self, params, x, positions, router_bias, want_cache):
+        c = self.cfg
+        total_aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for si, pat in enumerate(self._stage_patterns()):
+            slots = params["stages"][si]
+
+            def body(carry, xs, pat=pat, slots=slots):
+                h = carry
+                aux_acc = jnp.zeros((), jnp.float32)
+                cache_out = {}
+                for j, kind in enumerate(pat):
+                    p = (
+                        params["shared_attn"]
+                        if kind == "shared_attn"
+                        else xs[f"slot{j}"]
+                    )
+                    h, cache, aux = self._block_full(
+                        kind, p, h, positions, router_bias, want_cache
+                    )
+                    aux_acc = aux_acc + aux
+                    cache_out[f"slot{j}"] = cache
+                return self._constrain(h), (cache_out, aux_acc)
+
+            if c.unroll:
+                reps = jax.tree_util.tree_leaves(slots)[0].shape[0]
+                stage_cache_list, aux_list = [], []
+                for i in range(reps):
+                    sl = jax.tree.map(lambda t: t[i], slots)
+                    x, (co, au) = body(x, sl)
+                    stage_cache_list.append(co)
+                    aux_list.append(au)
+                stage_cache = jax.tree.map(
+                    lambda *ts: jnp.stack(ts), *stage_cache_list
+                )
+                auxes = jnp.stack(aux_list)
+            else:
+                if c.remat and not want_cache:
+                    body = jax.checkpoint(body, prevent_cse=False)
+                x, (stage_cache, auxes) = jax.lax.scan(body, x, slots)
+            caches.append(stage_cache)
+            total_aux = total_aux + jnp.sum(auxes)
+        return x, caches, total_aux
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params, batch) -> tuple[Array, Array]:
+        """Training/eval forward: logits (B, S, [K,] V) + moe aux loss."""
+        x = self._constrain(self._embed(params, batch))
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        rb = self._router_bias(params, batch, s)
+        x, _, aux = self._run_stages(params, x, positions, rb, want_cache=False)
+        return self._logits(params, x, batch), aux
+
+    def loss_fn(self, params, batch, aux_weight: float = 0.01):
+        """Softmax cross-entropy, written sharding-friendly: the label logit
+        is extracted by a masked REDUCTION over the vocab axis (lowers to a
+        partial sum + small all-reduce when vocab is model-sharded) instead of
+        a gather, which would force GSPMD to materialize full-vocab logits."""
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vocab_iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1
+        )
+        label_logit = jnp.sum(
+            jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+        )
+        nll = lse - label_logit
+        loss = jnp.mean(nll) + aux_weight * aux
+        return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def _empty_attn_cache(self, b, max_seq):
+        c = self.cfg
+        if c.use_mla:
+            return (
+                jnp.zeros((b, max_seq, c.kv_lora), self.dtype),
+                jnp.zeros((b, max_seq, c.qk_rope), self.dtype),
+            )
+        return (
+            jnp.zeros((b, max_seq, c.num_kv_heads, c.head_dim), self.dtype),
+            jnp.zeros((b, max_seq, c.num_kv_heads, c.head_dim), self.dtype),
+        )
+
+    def _empty_block_cache(self, kind, b, max_seq):
+        c = self.cfg
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            return self._empty_attn_cache(b, max_seq)
+        if kind == "mamba":
+            d_inner, nh, conv_dim = mamba_lib.dims(
+                c.d_model, c.ssm_state, c.ssm_head_dim
+            )
+            return (
+                jnp.zeros((b, mamba_lib.CONV_K - 1, conv_dim), self.dtype),
+                jnp.zeros((b, nh, c.ssm_head_dim, c.ssm_state), jnp.float32),
+            )
+        if kind == "mlstm":
+            d_inner = int(c.d_model * 2.0)
+            hd = d_inner // c.num_heads
+            return xlstm_lib.mlstm_init_state(b, c.num_heads, hd)
+        if kind == "slstm":
+            return xlstm_lib.slstm_init_state(
+                b, c.num_heads, c.d_model // c.num_heads
+            )
+        raise ValueError(kind)
+
+    def init_cache(self, batch_size: int, max_seq: int) -> list:
+        """Cache pytree: list (stage) of {slot: stacked entries (P, ...)}."""
+        caches = []
+        for si, pat in enumerate(self._stage_patterns()):
+            reps = self.cfg.num_periods if si == 0 and self.cfg.num_periods > 0 else 1
+            stage = {}
+            for j, kind in enumerate(pat):
+                one = self._empty_block_cache(kind, batch_size, max_seq)
+                stage[f"slot{j}"] = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape), one
+                )
+            caches.append(stage)
+        return caches
+
+    def prefill(self, params, batch, max_seq: int):
+        """Run the full prompt, return (last_logits, caches padded to max_seq)."""
+        c = self.cfg
+        x = self._constrain(self._embed(params, batch))
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        rb = self._router_bias(params, batch, s)
+        x, raw_caches, _ = self._run_stages(params, x, positions, rb, want_cache=True)
+
+        def pad_attn(t):  # (P, B, S, ...) -> (P, B, max_seq, ...)
+            pad = [(0, 0)] * t.ndim
+            pad[2] = (0, max_seq - t.shape[2])
+            return jnp.pad(t, pad)
+
+        caches = []
+        for si, pat in enumerate(self._stage_patterns()):
+            stage = {}
+            for j, kind in enumerate(pat):
+                entry = raw_caches[si][f"slot{j}"]
+                if kind in ("attn", "attn_moe", "shared_attn"):
+                    entry = jax.tree.map(pad_attn, entry)
+                stage[f"slot{j}"] = entry
+            caches.append(stage)
+        logits = self._logits(params, x[:, -1:, :], batch)
+        return logits, caches
+
+    @staticmethod
+    def _cache_write(cache, new, pos):
+        """Sharding-friendly cache write: masked select along the sequence
+        dim instead of dynamic_update_slice — each shard writes locally, so
+        sequence-sharded KV caches (flash-decode layout) never get gathered.
+        cache: (B, S, ...), new: (B, 1, ...)."""
+        s = cache.shape[1]
+        mask = (jnp.arange(s) == pos).reshape((1, s) + (1,) * (cache.ndim - 2))
+        return jnp.where(mask, new.astype(cache.dtype), cache)
+
+    def _block_decode(self, kind, p, x, cache, pos, router_bias):
+        c = self.cfg
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            h = apply_norm(c.norm_kind, x, p["norm1"] or None)
+            if c.use_mla:
+                c_cache, r_cache = cache
+                c_kv = matmul(h, p["attn"]["w_dkv"])  # (B, 1, r)
+                k_rope = attn_lib.apply_rope(
+                    matmul(h, p["attn"]["w_krope"])[:, :, None, :],
+                    jnp.full((h.shape[0], 1), pos),
+                    c.rope_theta,
+                )[:, :, 0, :]
+                c_cache = self._cache_write(c_cache, c_kv, pos)
+                r_cache = self._cache_write(r_cache, k_rope, pos)
+                out = attn_lib.mla_decode(
+                    p["attn"], h, self._mla_dims(), c_cache, r_cache, pos,
+                    c.rope_theta,
+                )
+                new_cache = (c_cache, r_cache)
+            else:
+                k_cache, v_cache = cache
+                q, k, v = attn_lib.gqa_project(
+                    p["attn"], h, c.num_heads, c.num_kv_heads, c.head_dim
+                )
+                posv = jnp.full((h.shape[0], 1), pos)
+                q = attn_lib.apply_rope(q, posv, c.rope_theta)
+                k = attn_lib.apply_rope(k, posv, c.rope_theta)
+                k_cache = self._cache_write(k_cache, k, pos)
+                v_cache = self._cache_write(v_cache, v, pos)
+                o = attn_lib.decode_attend(
+                    q, k_cache, v_cache, pos, sliding_window=c.sliding_window
+                )
+                b = o.shape[0]
+                out = matmul(
+                    o.reshape(b, 1, c.num_heads * c.head_dim), p["attn"]["wo"]
+                )
+                new_cache = (k_cache, v_cache)
+            x = x + out
+            h = apply_norm(c.norm_kind, x, p["norm2"] or None)
+            if kind == "attn_moe":
+                ff, _ = apply_moe(
+                    p["moe"], h, top_k=c.top_k, capacity_factor=c.capacity_factor,
+                    router_bias=router_bias, groups=c.moe_groups,
+                    fsdp_gather=c.fsdp_gather_moe,
+                )
+            else:
+                ff = apply_mlp(p["mlp"], h, c.mlp_kind)
+            return x + ff, new_cache
+        if kind == "mamba":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = mamba_lib.mamba2_step(
+                p["mamba"], h, cache, d_state=c.ssm_state, head_dim=c.ssm_head_dim
+            )
+            return x + out, state
+        if kind == "mlstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = xlstm_lib.mlstm_step(p["mlstm"], h, cache, n_heads=c.num_heads)
+            return x + out, state
+        if kind == "slstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = xlstm_lib.slstm_step(p["slstm"], h, cache, n_heads=c.num_heads)
+            return x + out, state
+        raise ValueError(kind)
+
+    def decode_step(self, params, batch, caches, pos):
+        """One-token decode. batch: {'tokens': (B,1[,K]) [, task_ids, vlm...]}.
+        Returns (logits (B,1,[K,]V), new caches)."""
+        x = self._constrain(self._embed(params, batch))
+        rb = self._router_bias(params, batch, 1)
+        new_caches = []
+        for si, pat in enumerate(self._stage_patterns()):
+            slots = params["stages"][si]
+
+            def body(carry, xs, pat=pat):
+                h = carry
+                slot_params, slot_caches = xs
+                out_caches = {}
+                for j, kind in enumerate(pat):
+                    p = (
+                        params["shared_attn"]
+                        if kind == "shared_attn"
+                        else slot_params.get(f"slot{j}")
+                    )
+                    h, nc = self._block_decode(
+                        kind, p, h, slot_caches[f"slot{j}"], pos, rb
+                    )
+                    out_caches[f"slot{j}"] = nc
+                return h, out_caches
+
+            if self.cfg.unroll:
+                reps = jax.tree_util.tree_leaves(caches[si])[0].shape[0]
+                outs = []
+                for i in range(reps):
+                    xs_i = jax.tree.map(lambda t: t[i], (slots, caches[si]))
+                    x, co = body(x, xs_i)
+                    outs.append(co)
+                stage_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+            else:
+                x, stage_cache = jax.lax.scan(body, x, (slots, caches[si]))
+            new_caches.append(stage_cache)
+        logits = self._logits(params, x, batch)
+        return logits, new_caches

@@ -1,0 +1,160 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (dropping, GShard-style
+capacity but WITHOUT the quadratic dispatch einsum).
+
+FLOPs are tokens * top_k * capacity_factor * d * d_ff (matching the roofline's
+6 * N_active * D accounting) because dispatch is an argsort + scatter into
+per-expert buffers followed by batched dense matmuls, not a (tokens x E x C)
+one-hot contraction.
+
+Supports DeepSeek-V2 style shared experts (always-on) and a per-token router
+bias hook used by the graph-multi-task integration (per-task personalized
+routing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul
+
+Array = jax.Array
+
+
+def init_moe(
+    key, d: int, d_ff: int, n_experts: int, n_shared: int, dtype
+) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, n_experts), dtype=jnp.float32),
+        "wg": dense_init(ks[1], (n_experts, d, d_ff), in_axis=1, dtype=dtype),
+        "wi": dense_init(ks[2], (n_experts, d, d_ff), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (n_experts, d_ff, d), in_axis=1, dtype=dtype),
+    }
+    if n_shared > 0:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d, n_shared * d_ff, "swiglu", dtype)
+    return p
+
+
+def regather_expert_weights(params: dict) -> dict:
+    """Explicit FSDP weight gather: constrain the expert matrices to be
+    UNSHARDED on d_model (only ff on the model axis) before the expert
+    einsums. Without this, GSPMD contracts against the d-on-data storage
+    sharding and all-reduces ACTIVATION-sized partials (buf x ff) per layer;
+    with it, the per-layer collective is one weight-sized all-gather —
+    orders of magnitude smaller for large capacity buffers."""
+    from jax.sharding import PartitionSpec as P
+
+    wsc = jax.lax.with_sharding_constraint
+    out = dict(params)
+    e = params["wg"].shape[0]
+    model_ok = lambda n: "model"  # ff dims are 128-multiples in all configs
+    out["wg"] = wsc(params["wg"], P(None, None, "model"))
+    out["wi"] = wsc(params["wi"], P(None, None, "model"))
+    out["wo"] = wsc(params["wo"], P(None, "model", None))
+    return out
+
+
+def _moe_one_group(params, xf, bias, top_k: int, cap: int):
+    """Dispatch + expert compute + combine for ONE token group.
+
+    xf: (T', d). Returns (out (T', d), aux ()). The caller vmaps this over
+    groups whose leading dim is sharded on the data axis, so the data-
+    dependent scatter/gather stays SHARD-LOCAL — GSPMD never replicates the
+    dispatch buffers (which it must do for a global scatter).
+    """
+    t, d = xf.shape
+    e = params["router"].shape[1]
+
+    logits = (xf.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T', E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (T', k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance auxiliary loss (Switch-style), per group ----
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,)).at[expert_idx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    a = t * top_k
+    flat_expert = expert_idx.reshape(a)
+    flat_gate = gate_vals.reshape(a)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_expert)  # stable
+    se, sg, st_tok = flat_expert[order], flat_gate[order], flat_token[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts  # (E,)
+    slot = jnp.arange(a) - starts[se]  # rank within expert
+
+    keep = slot < cap
+    dest = jnp.where(keep, se * cap + slot, e * cap)  # overflow -> scratch row
+
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[dest].set(xf[st_tok])
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- batched per-expert SwiGLU ----
+    gate = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, params["wg"],
+                   preferred_element_type=jnp.float32)
+    )
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wi"],
+                    preferred_element_type=jnp.float32)
+    y = jnp.einsum("ecf,efd->ecd", (gate * up).astype(xf.dtype), params["wo"],
+                   preferred_element_type=jnp.float32).astype(xf.dtype)
+    y = y.reshape(e * cap, d)
+
+    # ---- combine (weighted gather back to tokens) ----
+    y_assign = jnp.where(keep[:, None], y[jnp.where(keep, dest, 0)], 0.0)
+    out = (
+        jnp.zeros((t, d), jnp.float32)
+        .at[st_tok]
+        .add(y_assign.astype(jnp.float32) * sg[:, None])
+    ).astype(xf.dtype)
+    return out, aux
+
+
+def apply_moe(
+    params: dict,
+    x: Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_bias: Array | None = None,
+    groups: int = 1,
+    fsdp_gather: bool = False,
+) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss ()).
+
+    router_bias: optional (B, S, E) per-token logit bias (per-task
+    personalized routing). ``groups``: number of dispatch groups — set to
+    the data-axis size so each data shard dispatches locally (tokens are
+    batch-major, so group g == data shard g).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    if fsdp_gather:
+        params = regather_expert_weights(params)
+    t = b * s
+    if t % groups != 0 or t < groups:
+        groups = 1
+    tg = t // groups
+    cap = int(max(1, -(-tg * top_k * capacity_factor // e)))  # ceil per group
+    xg = x.reshape(groups, tg, d)
+    bias = (
+        router_bias.reshape(groups, tg, e) if router_bias is not None else None
+    )
+    out, aux = jax.vmap(
+        lambda xx, bb: _moe_one_group(params, xx, bb, top_k, cap),
+        in_axes=(0, None if bias is None else 0),
+    )(xg, bias)
+
+    out = out.reshape(b, s, d)
+    if "shared" in params:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(params["shared"], x.reshape(t, d), "swiglu").reshape(b, s, d)
+    return out, jnp.mean(aux)

@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent weights, strictly sequential) [arXiv:2405.04517].
+
+Both are implemented as exact stabilized recurrences via ``lax.scan`` over
+time — correct by construction and identical between train and decode; the
+chunkwise-parallel mLSTM reformulation is a §Perf hillclimb documented in
+EXPERIMENTS.md (the recurrence is the paper-faithful baseline).
+
+State layouts:
+  mLSTM: C (B, nh, hd, hd), n (B, nh, hd), m (B, nh)
+  sLSTM: c, n, h (B, nh, hd), m (B, nh)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul, rms_norm
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, d_model: int, n_heads: int, proj_factor: float = 2.0):
+    d_inner = int(d_model * proj_factor)
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * d_inner)),  # [x_in, gate z]
+        "wq": dense_init(ks[1], (d_inner, d_inner)),
+        "wk": dense_init(ks[2], (d_inner, d_inner)),
+        "wv": dense_init(ks[3], (d_inner, d_inner)),
+        "w_if": dense_init(ks[4], (d_inner, 2 * n_heads)),  # input/forget gates
+        "norm_gain": jnp.zeros((d_inner,)),
+        "w_down": dense_init(ks[5], (d_inner, d_model)),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One step of the stabilized mLSTM recurrence."""
+    c, n, m = state  # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+    q, k, v, i_pre, f_pre = qkvif  # (B,nh,hd) x3, (B,nh) x2
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B, nh)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_sc = jnp.exp(log_f + m - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    c_new = c * f_sc[..., None] + i_sc[..., None] * (
+        k[..., :, None] * v[..., None, :]
+    )  # outer product k v^T
+    n_new = n * f_sc + i_sc * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new)
+    )[..., None]
+    h = num / den
+    return (c_new, n_new, m_new), h
+
+
+def _mlstm_qkvif(params, x, n_heads):
+    """x: (B, T, d_model) -> per-step tensors + gate z."""
+    b, t, _ = x.shape
+    up = matmul(x, params["w_up"])
+    d_inner = up.shape[-1] // 2
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+    hd = d_inner // n_heads
+    q = matmul(x_in, params["wq"]).reshape(b, t, n_heads, hd)
+    k = matmul(x_in, params["wk"]).reshape(b, t, n_heads, hd) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    ).astype(x.dtype)
+    v = matmul(x_in, params["wv"]).reshape(b, t, n_heads, hd)
+    gates = matmul(x_in, params["w_if"]).astype(jnp.float32)
+    i_pre, f_pre = gates[..., :n_heads], gates[..., n_heads:]
+    return q, k, v, i_pre, f_pre, z, d_inner
+
+
+def mlstm_init_state(b, n_heads, hd):
+    return (
+        jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, n_heads, hd), jnp.float32),
+        jnp.full((b, n_heads), -1e30, jnp.float32),
+    )
+
+
+def _chunked_scan(step, state, xs, t: int, chunk: int):
+    """Time scan in remat'd chunks: only chunk-boundary states are saved for
+    the backward pass (memory O(T/chunk * |state|) instead of O(T * |state|));
+    each chunk's interior is recomputed. chunk <= 0 or T % chunk != 0 falls
+    back to the plain scan (the paper-faithful baseline path)."""
+    if chunk <= 1 or t % chunk != 0 or t <= chunk:
+        return jax.lax.scan(step, state, xs)
+    nc = t // chunk
+
+    def chunked(t_arr):
+        return t_arr.reshape((nc, chunk) + t_arr.shape[1:])
+
+    xs_c = jax.tree.map(chunked, xs)
+
+    @jax.checkpoint
+    def one_chunk(st, xc):
+        return jax.lax.scan(step, st, xc)
+
+    state, hs = jax.lax.scan(one_chunk, state, xs_c)
+    hs = jax.tree.map(lambda a: a.reshape((t,) + a.shape[2:]), hs)
+    return state, hs
+
+
+def mlstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
+    """Full-sequence mLSTM block. Returns (y, final_state)."""
+    b, t, d_model = x.shape
+    q, k, v, i_pre, f_pre, z, d_inner = _mlstm_qkvif(params, x, n_heads)
+    hd = d_inner // n_heads
+    if state is None:
+        state = mlstm_init_state(b, n_heads, hd)
+
+    def step(st, inp):
+        return _mlstm_cell(st, inp)
+
+    xs = (
+        q.swapaxes(0, 1).astype(jnp.float32),
+        k.swapaxes(0, 1).astype(jnp.float32),
+        v.swapaxes(0, 1).astype(jnp.float32),
+        i_pre.swapaxes(0, 1),
+        f_pre.swapaxes(0, 1),
+    )
+    state, hs = _chunked_scan(step, state, xs, t, chunk)
+    h = hs.swapaxes(0, 1).reshape(b, t, d_inner).astype(x.dtype)
+    h = rms_norm(h, params["norm_gain"]) * jax.nn.silu(z)
+    return matmul(h, params["w_down"]), state
+
+
+def mlstm_step(params, x, state, *, n_heads: int):
+    """Single-token decode; state O(1) in sequence length."""
+    y, state = mlstm_full(params, x, n_heads=n_heads, state=state, chunk=0)
+    return y, state
+
+
+# ----------------------------------------------- chunkwise-parallel mLSTM
+def mlstm_chunkwise(params, x, *, n_heads: int, chunk: int = 64, state=None):
+    """Beyond-paper compute-term optimization: the EXACT stabilized mLSTM
+    computed chunkwise-parallel — intra-chunk terms are (c x c) MXU matmuls,
+    only one scan step per chunk carries (C, n, m). Algebraically identical
+    to the sequential recurrence (tested to ~1e-4 in f32):
+
+      num_t = e^{cum_t + m_in - m_t} q_t C_in
+              + sum_{s<=t} e^{cum_t - cum_s + i_s - m_t} (q_t.k_s) v_s
+      den_t = max(|e^{cum_t + m_in - m_t} q_t.n_in + sum_s w_ts|, e^{-m_t})
+
+    with cum the within-chunk cumulative log forget gate and m_t the running
+    stabilizer.
+    """
+    b, t, d_model = x.shape
+    q, k, v, i_pre, f_pre, z, d_inner = _mlstm_qkvif(params, x, n_heads)
+    hd = d_inner // n_heads
+    if state is None:
+        state = mlstm_init_state(b, n_heads, hd)
+    if t % chunk != 0:
+        chunk = t
+    nc = t // chunk
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def r(a):  # (B, T, ...) -> (nc, B, c, ...)
+        return (
+            a.reshape((b, nc, chunk) + a.shape[2:])
+            .swapaxes(0, 1)
+            .astype(jnp.float32)
+        )
+
+    qc_, kc_, vc_, ic_, fc_ = map(r, (q, k, v, i_pre, f_pre))
+
+    def process_chunk(carry, inp):
+        c_st, n_st, m_st = carry  # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+        qi, ki, vi, ii, fi = inp  # (B,c,nh,hd) x3, (B,c,nh) x2
+        lf = jax.nn.log_sigmoid(fi)  # (B,c,nh)
+        cum = jnp.cumsum(lf, axis=1)
+        d_mat = (
+            cum[:, :, None, :] - cum[:, None, :, :] + ii[:, None, :, :]
+        )  # (B,t,s,nh)
+        d_mat = jnp.where(tril[None, :, :, None], d_mat, -jnp.inf)
+        state_exp = cum + m_st[:, None, :]  # (B,c,nh)
+        m_loc = jnp.maximum(state_exp, jnp.max(d_mat, axis=2))  # (B,c,nh)
+        w = jnp.exp(d_mat - m_loc[:, :, None, :]) * jnp.einsum(
+            "bthd,bshd->btsh", qi, ki
+        )
+        sc = jnp.exp(state_exp - m_loc)  # (B,c,nh)
+        num = sc[..., None] * jnp.einsum("bthd,bhde->bthe", qi, c_st) + jnp.einsum(
+            "btsh,bshd->bthd", w, vi
+        )
+        den_raw = sc * jnp.einsum("bthd,bhd->bth", qi, n_st) + jnp.sum(w, axis=2)
+        den = jnp.maximum(jnp.abs(den_raw), jnp.exp(-m_loc))
+        h = num / den[..., None]
+        # chunk-boundary state
+        tail = cum[:, -1:, :] - cum + ii  # (B,c,nh)
+        m_out = jnp.maximum(cum[:, -1, :] + m_st, jnp.max(tail, axis=1))
+        decay = jnp.exp(tail - m_out[:, None, :])
+        carry_sc = jnp.exp(cum[:, -1, :] + m_st - m_out)
+        c_out = carry_sc[..., None, None] * c_st + jnp.einsum(
+            "bsh,bshd,bshe->bhde", decay, ki, vi
+        )
+        n_out = carry_sc[..., None] * n_st + jnp.einsum("bsh,bshd->bhd", decay, ki)
+        return (c_out, n_out, m_out), h
+
+    state, hs = jax.lax.scan(process_chunk, state, (qc_, kc_, vc_, ic_, fc_))
+    # hs: (nc, B, c, nh, hd) -> (B, T, d_inner)
+    h = hs.swapaxes(0, 1).reshape(b, t, d_inner).astype(x.dtype)
+    h = rms_norm(h, params["norm_gain"]) * jax.nn.silu(z)
+    return matmul(h, params["w_down"]), state
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates z, i, f, o
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model)),
+        # block-diagonal recurrent weights per head, per gate
+        "r": dense_init(ks[1], (4, n_heads, hd, hd), in_axis=2),
+        "norm_gain": jnp.zeros((d_model,)),
+        "w_out": dense_init(ks[2], (d_model, d_model)),
+    }
+
+
+def slstm_init_state(b, n_heads, hd):
+    z = jnp.zeros((b, n_heads, hd), jnp.float32)
+    return (z, z, z, jnp.zeros((b, n_heads), jnp.float32))  # c, n, h, m
+
+
+def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
+    """Sequential sLSTM with exponential gating + stabilizer. x: (B,T,d)."""
+    b, t, d_model = x.shape
+    hd = d_model // n_heads
+    pre = matmul(x, params["w_in"]).reshape(b, t, 4, n_heads, hd)
+    if state is None:
+        state = slstm_init_state(b, n_heads, hd)
+    r = params["r"].astype(jnp.float32)
+
+    def step(st, inp):
+        c, n, h, m = st
+        p = inp.astype(jnp.float32)  # (B, 4, nh, hd)
+        rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (B, 4, nh, hd)
+        z_pre, i_pre, f_pre, o_pre = [p[:, g] + rec[:, g] for g in range(4)]
+        i_gate = jnp.mean(i_pre, axis=-1)  # scalar gates per head
+        f_gate = jnp.mean(f_pre, axis=-1)
+        log_f = jax.nn.log_sigmoid(f_gate)
+        m_new = jnp.maximum(log_f + m, i_gate)
+        f_sc = jnp.exp(log_f + m - m_new)[..., None]
+        i_sc = jnp.exp(i_gate - m_new)[..., None]
+        z_val = jnp.tanh(z_pre)
+        c_new = f_sc * c + i_sc * z_val
+        n_new = f_sc * n + i_sc
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = _chunked_scan(step, state, pre.swapaxes(0, 1), t, chunk)
+    h = hs.swapaxes(0, 1).reshape(b, t, d_model).astype(x.dtype)
+    h = rms_norm(h, params["norm_gain"])
+    return matmul(h, params["w_out"]), state
+
+
+def slstm_step(params, x, state, *, n_heads: int):
+    return slstm_full(params, x, n_heads=n_heads, state=state)

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adamw, sgd, Optimizer, cosine_schedule

@@ -1,0 +1,96 @@
+"""Minimal optax-style optimizers (pure pytrees, no external deps).
+
+``Optimizer`` bundles init/update; state leaves mirror param shapes so the
+launcher's sharding rules apply transparently to optimizer state (ZeRO-style:
+moments shard exactly like their parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        step_lr = lr_fn(step)
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - step_lr * g, params, grads)
+            return new, ()
+        new_state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        new = jax.tree.map(lambda p, m: p - step_lr * m, params, new_state)
+        return new, new_state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr: float | Callable = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        step_lr = lr_fn(step)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, m, v):
+            step_val = step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_val = step_val + step_lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_val).astype(p.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), AdamState(mu, nu)
+
+    return Optimizer(init, update)

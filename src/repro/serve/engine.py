@@ -1,0 +1,76 @@
+"""Batched serving: prefill + greedy/temperature decode over the cache API.
+
+``ServeEngine`` jits the prefill and decode steps once per (batch, seq)
+shape; ``generate`` is the convenience wrapper used by the examples and the
+serving benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import TransformerLM
+
+
+def _sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: TransformerLM
+    params: Any
+    max_seq: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_seq)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        prompt_batch: dict,
+        num_tokens: int,
+        key=None,
+        temperature: float = 0.0,
+    ) -> np.ndarray:
+        """prompt_batch: model inputs with (B, S0) tokens. Returns the
+        generated token ids (B, num_tokens[, K])."""
+        cfg = self.model.cfg
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        b, s0 = prompt_batch["tokens"].shape[:2]
+        assert s0 + num_tokens <= self.max_seq
+        logits, caches = self._prefill(self.params, prompt_batch)
+        outs = []
+        tok = _sample(logits[:, -1], key, temperature)
+        for t in range(num_tokens):
+            outs.append(np.asarray(tok))
+            step_batch = {"task_ids": prompt_batch.get("task_ids", jnp.zeros(b, jnp.int32))}
+            if cfg.input_mode == "audio":
+                step_batch["tokens"] = tok.reshape(b, 1, cfg.num_codebooks)
+            else:
+                step_batch["tokens"] = tok.reshape(b, 1)
+                if cfg.input_mode == "vlm":
+                    step_batch["vision_embeds"] = jnp.zeros(
+                        (b, 1, cfg.d_model), jnp.float32
+                    )
+                    step_batch["vision_mask"] = jnp.zeros((b, 1), bool)
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(
+                self.params, step_batch, caches, s0 + t
+            )
+            tok = _sample(logits[:, 0], sub, temperature)
+        return np.stack(outs, axis=1)
+
+
+def generate(model, params, prompt_batch, num_tokens, max_seq, **kw) -> np.ndarray:
+    return ServeEngine(model, params, max_seq).generate(prompt_batch, num_tokens, **kw)

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    MeshAxes,
+    param_specs,
+    batch_specs,
+    cache_specs,
+    train_state_specs,
+)

@@ -1,0 +1,229 @@
+"""Sharding rules: map every parameter / input / cache leaf to a
+PartitionSpec on the (pod,) data x model mesh.
+
+Strategy (MaxText-style 2-D FSDP x TP):
+  * weight matrices      P(fsdp, model)  on (fan_in, fan_out); output
+    projections (wo / w_down / w_out) are P(model, fsdp) so the TP
+    contraction reduces over the model axis;
+  * embeddings / head    vocab on model, d_model on fsdp;
+  * MoE experts          expert axis on model when divisible (expert
+    parallelism), otherwise per-expert TP;
+  * per-task leaves      task axis on fsdp (tasks == data-parallel groups —
+    the paper's machines);
+  * KV caches            batch on fsdp when divisible; otherwise the
+    *sequence* dimension takes the fsdp axis (flash-decode style); kv-heads
+    on model when divisible, else sequence additionally takes model;
+  * every rule degrades to None when the dimension isn't divisible — the
+    helper `_maybe` makes that explicit and total.
+
+fsdp == ("pod", "data") in multi-pod mode, ("data",) single-pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    fsdp: tuple[str, ...] = ("data",)
+    model: str = "model"
+    fsdp_size: int = 16
+    model_size: int = 16
+
+    def maybe_fsdp(self, dim: int):
+        return self.fsdp if dim % self.fsdp_size == 0 else None
+
+    def maybe_model(self, dim: int):
+        return self.model if dim % self.model_size == 0 else None
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
+_OUT_PROJ = ("wo", "w_down", "w_out")
+_IN_PROJ = (
+    "wq", "wk", "wv", "wg", "wi", "w_in", "w_up", "w_if", "wq_full",
+)
+
+
+def _leaf_spec(name: str, path: str, shape: tuple[int, ...], ax: MeshAxes) -> P:
+    nd = len(shape)
+    # ---------- per-task personalization ----------
+    if "/task/" in path or path.startswith("task/"):
+        rest = [None] * (nd - 1)
+        if nd >= 2:
+            rest[-1] = ax.maybe_model(shape[-1])
+        return P(ax.maybe_fsdp(shape[0]), *rest)
+    # ---------- embeddings / head ----------
+    if name == "embed":
+        if nd == 3:  # audio codebooks (K, V, d)
+            return P(None, ax.maybe_model(shape[1]), ax.maybe_fsdp(shape[2]))
+        return P(ax.maybe_model(shape[0]), ax.maybe_fsdp(shape[1]))
+    if name == "head":
+        return P(ax.maybe_fsdp(shape[0]), ax.maybe_model(shape[1]))
+    # ---------- MoE ----------
+    if name == "router":
+        return P(ax.maybe_fsdp(shape[0]), None)
+    if "/moe/" in path and nd == 3:
+        e, a, b = shape
+        if e % ax.model_size == 0:  # expert parallelism
+            return P(ax.model, ax.maybe_fsdp(a), None)
+        # replicated experts, TP inside each expert
+        if name in _OUT_PROJ:
+            return P(None, ax.maybe_model(a), ax.maybe_fsdp(b))
+        return P(None, ax.maybe_fsdp(a), ax.maybe_model(b))
+    # ---------- MLA ----------
+    if name in ("w_dkv", "w_krope"):
+        return P(ax.maybe_fsdp(shape[0]), ax.maybe_model(shape[1]))
+    if name in ("w_uk", "w_uv"):
+        return P(ax.maybe_fsdp(shape[0]), ax.maybe_model(shape[1]))
+    # ---------- conv / small recurrent ----------
+    if name == "conv_w":
+        return P(None, ax.maybe_model(shape[1]))
+    if name == "r":  # sLSTM recurrent block-diagonal (4, nh, hd, hd)
+        return P(*([None] * nd))
+    # ---------- generic projections ----------
+    if nd == 2:
+        if name in _OUT_PROJ:
+            return P(ax.maybe_model(shape[0]), ax.maybe_fsdp(shape[1]))
+        return P(ax.maybe_fsdp(shape[0]), ax.maybe_model(shape[1]))
+    # ---------- vectors (norm gains, biases, A_log, ...) ----------
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ArchConfig, params: PyTree, ax: MeshAxes) -> PyTree:
+    """Specs mirroring a params pytree (accepts arrays or ShapeDtypeStructs).
+
+    Leaves under 'stages' carry a leading period axis from the layer scan —
+    the rule applies to the trailing dims with None prepended.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        name = pstr.rsplit("/", 1)[-1]
+        shape = tuple(leaf.shape)
+        if pstr.startswith("stages/") and len(shape) >= 1:
+            inner = _leaf_spec(name, pstr, shape[1:], ax)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_leaf_spec(name, pstr, shape, ax))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ArchConfig, batch: PyTree, ax: MeshAxes) -> PyTree:
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        lead = ax.maybe_fsdp(b)
+        rest = [None] * (leaf.ndim - 1)
+        return P(lead, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def _attn_cache_spec(
+    shape: tuple[int, ...], ax: MeshAxes, mla_mode: str = "lora"
+) -> P:
+    """KV cache (B, S, KVH, hd) or MLA (B, S, r)."""
+    b, s = shape[0], shape[1]
+    batch_ax = ax.maybe_fsdp(b)
+    seq_axes: list[str] = []
+    seq_shards = 1
+    if batch_ax is None and s % ax.fsdp_size == 0:
+        seq_axes.extend(ax.fsdp)
+        seq_shards *= ax.fsdp_size
+    if len(shape) == 4:
+        kvh = shape[2]
+        head_ax = ax.maybe_model(kvh)
+        if head_ax is None and s % (seq_shards * ax.model_size) == 0:
+            seq_axes.append(ax.model)
+        seq_spec = tuple(seq_axes) if seq_axes else None
+        return P(batch_ax, seq_spec, head_ax, None)
+    # MLA compressed cache (B, S, r)
+    if mla_mode == "seq":
+        seq_axes.append(ax.model)
+        return P(batch_ax, tuple(seq_axes), None)
+    r_ax = None if mla_mode == "replicate" else ax.maybe_model(shape[2])
+    seq_spec = tuple(seq_axes) if seq_axes else None
+    return P(batch_ax, seq_spec, r_ax)
+
+
+def cache_specs(cfg: ArchConfig, caches: PyTree, ax: MeshAxes) -> PyTree:
+    """Specs for the serving cache pytree (leaves carry a leading period
+    axis). Attention caches get the flash-decode layout; SSM/xLSTM states
+    shard batch (when divisible) and their widest inner dim on model."""
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)[1:]  # strip period axis
+        nd = len(shape)
+        if nd >= 3 and shape[1] >= 1024:  # attention KV / MLA cache
+            mla_mode = (
+                "seq" if cfg.mla_cache_seq_shard
+                else "replicate" if cfg.mla_replicate_cache
+                else "lora"
+            )
+            inner = _attn_cache_spec(shape, ax, mla_mode=mla_mode)
+        elif nd == 4:  # mamba ssm (B, nh, hd, ds) or mlstm C (B, nh, hd, hd)
+            inner = P(
+                ax.maybe_fsdp(shape[0]),
+                ax.maybe_model(shape[1]),
+                ax.maybe_model(shape[2]) if shape[1] % ax.model_size else None,
+                None,
+            )
+            # avoid double-sharding: prefer heads; else head_dim
+            if shape[1] % ax.model_size == 0:
+                inner = P(ax.maybe_fsdp(shape[0]), ax.model, None, None)
+            elif shape[2] % ax.model_size == 0:
+                inner = P(ax.maybe_fsdp(shape[0]), None, ax.model, None)
+            else:
+                inner = P(ax.maybe_fsdp(shape[0]), None, None, None)
+        elif nd == 3:  # conv tail (B, K-1, conv_dim) or small states (B,nh,hd)
+            inner = P(ax.maybe_fsdp(shape[0]), None, ax.maybe_model(shape[2]))
+        elif nd == 2:
+            inner = P(ax.maybe_fsdp(shape[0]), None)
+        else:
+            inner = P(*([None] * nd))
+        return P(None, *inner)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def train_state_specs(cfg: ArchConfig, state, ax: MeshAxes):
+    """TrainState(params, opt_state, step): optimizer moments mirror params."""
+    pspecs = param_specs(cfg, state.params, ax)
+
+    def like_params(subtree):
+        if subtree is None or subtree == ():
+            return subtree
+        return param_specs(cfg, subtree, ax)
+
+    if isinstance(state.opt_state, tuple) and len(state.opt_state) == 0:
+        ospecs = ()
+    else:
+        ospecs = jax.tree_util.tree_map(
+            lambda _: None, state.opt_state, is_leaf=lambda x: False
+        )
+        # AdamState(mu, nu) — each mirrors params
+        from repro.optim.optimizers import AdamState
+
+        if isinstance(state.opt_state, AdamState):
+            ospecs = AdamState(
+                param_specs(cfg, state.opt_state.mu, ax),
+                param_specs(cfg, state.opt_state.nu, ax),
+            )
+    from repro.train.trainer import TrainState
+
+    return TrainState(pspecs, ospecs, P())

@@ -1,0 +1,108 @@
+"""Section 5 (consensus connection) and Appendix G (delay tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MultiTaskProblem,
+    SQUARED,
+    TaskGraph,
+    band_graph,
+    bol,
+    bol_delayed,
+    centralized_solution,
+    consensus_distance,
+    consensus_sgd,
+    ring_graph,
+    theorem7_rate,
+)
+from repro.core.consensus import mixing_limit_check
+from repro.data.synthetic import generate_clustered_tasks
+
+M, D, N = 10, 6, 40
+
+
+def _data(seed=0, clusters=2):
+    rng = np.random.default_rng(seed)
+    tasks = generate_clustered_tasks(rng, m=M, d=D, num_clusters=clusters, knn=3)
+    x, y = tasks.sample(rng, N)
+    return tasks, jnp.asarray(x), jnp.asarray(y)
+
+
+def test_uniform_weights_maintain_consensus():
+    """Uniform averaging + common init => iterates identical across machines
+    forever (Section 5, 'Averaging gradients')."""
+    tasks, x, y = _data()
+    problem = MultiTaskProblem(tasks.graph, SQUARED, eta=0.5, tau=1.0)
+    res = consensus_sgd(problem, x, y, num_iters=100)
+    assert float(consensus_distance(res.w)) < 1e-5
+
+
+def test_minv_tends_to_uniform_projector():
+    """M^{-1} -> (1/m) 1 1^T as tau -> inf for connected graphs (Section 5)."""
+    g = ring_graph(12)
+    dists = mixing_limit_check(g, eta=1.0, taus=[1e0, 1e2, 1e4, 1e6])
+    assert all(a > b for a, b in zip(dists, dists[1:]))
+    assert dists[-1] < 1e-4
+
+
+def test_limit_weights_doubly_stochastic():
+    """Eq. (12): the S->0 limit mixing I - L/lambda_m is doubly stochastic."""
+    g = band_graph(9, 2)
+    mu = g.consensus_mixing()
+    np.testing.assert_allclose(mu.sum(axis=0), 1.0, atol=1e-10)
+    np.testing.assert_allclose(mu.sum(axis=1), 1.0, atol=1e-10)
+
+
+def test_large_tau_bol_approaches_consensus():
+    """As tau grows the BOL solution's task spread shrinks (pluralism -> consensus)."""
+    _, x, y = _data()
+    graph = ring_graph(M)  # Section 5 requires a CONNECTED graph
+    spreads = []
+    for tau in [0.1, 10.0, 1000.0]:
+        problem = MultiTaskProblem(graph, SQUARED, eta=0.5, tau=tau)
+        w = centralized_solution(problem, x, y)
+        spreads.append(float(consensus_distance(w)))
+    assert spreads[0] > spreads[1] > spreads[2]
+    assert spreads[2] < 1e-2
+    # and BOL actually reaches that near-consensus solution at large tau
+    problem = MultiTaskProblem(graph, SQUARED, eta=0.5, tau=1000.0)
+    res = bol(problem, x, y, num_iters=2000)
+    assert float(consensus_distance(res.w)) < 5e-2
+
+
+def test_disconnected_graph_components_stay_plural():
+    """Disconnected graphs cannot reach consensus — each component behaves
+    independently (Section 5 caveat)."""
+    tasks, x, y = _data()
+    assert not tasks.graph.is_connected()
+    problem = MultiTaskProblem(tasks.graph, SQUARED, eta=0.5, tau=1000.0)
+    w = centralized_solution(problem, x, y)
+    assert float(consensus_distance(w)) > 0.1
+
+
+def test_delayed_bol_converges_to_erm():
+    """Theorem 7: delayed BOL still converges (doubly-stochastic A)."""
+    rng = np.random.default_rng(3)
+    # doubly-stochastic ring: each row sums to 1
+    g = ring_graph(M, weight=0.5)
+    tasks, x, y = _data(3)
+    problem = MultiTaskProblem(g, SQUARED, eta=1.0, tau=2.0)
+    w_star = centralized_solution(problem, x, y)
+    res = bol_delayed(problem, x, y, num_iters=800, max_delay=3)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_star), atol=5e-2)
+
+
+def test_delay_slows_convergence():
+    """Larger Gamma => slower linear rate, per Theorem 7."""
+    g = ring_graph(M, weight=0.5)
+    _, x, y = _data(4)
+    problem = MultiTaskProblem(g, SQUARED, eta=1.0, tau=2.0)
+    w_star = centralized_solution(problem, x, y)
+    errs = []
+    for gamma in [0, 4]:
+        res = bol_delayed(problem, x, y, num_iters=100, max_delay=max(gamma, 1),
+                          fixed_delay=(gamma > 0))
+        errs.append(float(jnp.linalg.norm(res.w - w_star)))
+    assert errs[0] < errs[1]
+    assert theorem7_rate(1.0, 2.0, 4) > theorem7_rate(1.0, 2.0, 0)

@@ -1,0 +1,155 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests,
+always against the pure-jnp ref.py oracles (interpret mode executes the real
+kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import band_graph
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.kernels.graph_mix.kernel import graph_mix_pallas
+from repro.kernels.graph_mix.ref import graph_mix_reference
+
+
+# ------------------------------------------------------------- graph_mix
+@pytest.mark.parametrize("m", [4, 16, 32, 100])
+@pytest.mark.parametrize("d", [128, 512, 1000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_mix_shapes_dtypes(m, d, dtype):
+    rng = np.random.default_rng(0)
+    mu = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    theta = jnp.asarray(rng.standard_normal((m, d))).astype(dtype)
+    got = graph_mix_pallas(mu, theta, block_d=256, interpret=True)
+    want = graph_mix_reference(mu, theta)
+    assert got.dtype == theta.dtype and got.shape == theta.shape
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_graph_mix_matches_paper_update():
+    """The kernel applied with mu = I - a*eta*M is exactly the BOL mixing."""
+    g = band_graph(16, 2)
+    eta, tau, alpha = 0.5, 2.0, 0.05
+    mu = jnp.asarray(g.bol_mixing(eta, tau, alpha), jnp.float32)
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(rng.standard_normal((16, 384)), jnp.float32)
+    got = graph_mix_pallas(mu, theta, interpret=True)
+    want = jnp.asarray(mu).T @ theta
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    m=st.integers(2, 24),
+    d=st.integers(1, 300),
+    block=st.sampled_from([128, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_graph_mix_property(m, d, block, seed):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    theta = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    got = graph_mix_pallas(mu, theta, block_d=block, interpret=True)
+    want = graph_mix_reference(mu, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_graph_mix_row_stochastic_preserves_constants():
+    """Property: doubly-stochastic mixing leaves a constant stack invariant."""
+    g = band_graph(12, 1)
+    mu = jnp.asarray(g.consensus_mixing(), jnp.float32)
+    theta = jnp.full((12, 200), 3.25, jnp.float32)
+    got = graph_mix_pallas(mu, theta, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 3.25, rtol=1e-5)
+
+
+# ------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("kvh,g", [(1, 4), (2, 8), (8, 1), (4, 4)])
+@pytest.mark.parametrize("s,block_s", [(256, 128), (512, 256), (300, 128)])
+def test_decode_attention_shapes(kvh, g, s, block_s):
+    rng = np.random.default_rng(0)
+    b, hd = 2, 64
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    pos = jnp.asarray(s - 5, jnp.int32)
+    got = decode_attention_pallas(q, k, v, pos, block_s=block_s, interpret=True)
+    want = decode_attention_reference(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_decode_attention_dtypes(dtype, tol):
+    rng = np.random.default_rng(1)
+    b, s, kvh, g, hd = 2, 384, 2, 4, 128
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, hd))).astype(dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd))).astype(dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd))).astype(dtype)
+    pos = jnp.asarray(200, jnp.int32)
+    got = decode_attention_pallas(q, k, v, pos, block_s=128, interpret=True)
+    want = decode_attention_reference(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+def test_decode_attention_sliding_window():
+    rng = np.random.default_rng(2)
+    b, s, kvh, g, hd = 1, 512, 2, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    pos = jnp.asarray(400, jnp.int32)
+    got = decode_attention_pallas(
+        q, k, v, pos, block_s=128, window=128, interpret=True
+    )
+    want = decode_attention_reference(q, k, v, pos, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    s=st.integers(16, 640),
+    pos_frac=st.floats(0.0, 1.0),
+    kvh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 6]),
+    seed=st.integers(0, 10_000),
+)
+def test_decode_attention_property(s, pos_frac, kvh, g, seed):
+    """Invariant: kernel == oracle for any cache length / decode position,
+    including pos << S (most of the cache masked)."""
+    rng = np.random.default_rng(seed)
+    b, hd = 1, 64
+    pos = jnp.asarray(int(pos_frac * (s - 1)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    got = decode_attention_pallas(q, k, v, pos, block_s=128, interpret=True)
+    want = decode_attention_reference(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel == the model's decode_attend (the jnp path used in dry-runs)."""
+    from repro.models.attention import decode_attend
+
+    rng = np.random.default_rng(3)
+    b, s, kvh, g, hd = 2, 256, 2, 4, 64
+    h = kvh * g
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    pos = jnp.asarray(100, jnp.int32)
+    got = decode_attention_pallas(
+        q.reshape(b, kvh, g, hd), k, v, pos, block_s=128, interpret=True
+    )
+    want = decode_attend(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(b, 1, h, hd)), np.asarray(want), atol=3e-5
+    )

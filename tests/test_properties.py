@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the system's structural invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MultiTaskProblem,
+    SQUARED,
+    TaskGraph,
+    band_graph,
+    complete_graph,
+    knn_graph,
+    ring_graph,
+    theory,
+)
+from repro.core.algorithms import prox_squared_loss
+
+
+def rand_graph(rng, m):
+    a = rng.uniform(0, 1, (m, m))
+    a = (a + a.T) / 2
+    np.fill_diagonal(a, 0)
+    a[a < 0.4] = 0.0
+    return TaskGraph(a)
+
+
+@settings(deadline=None, max_examples=30)
+@given(m=st.integers(3, 20), seed=st.integers(0, 1000))
+def test_laplacian_psd_and_null_space(m, seed):
+    """L is PSD and L @ 1 = 0 for every weighted graph."""
+    g = rand_graph(np.random.default_rng(seed), m)
+    lam = g.laplacian_eigvals()
+    assert lam[0] > -1e-9
+    np.testing.assert_allclose(g.laplacian() @ np.ones(m), 0.0, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=30)
+@given(m=st.integers(3, 15), d=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_penalty_equals_pairwise_form(m, d, seed):
+    """tr(W L W^T) == sum_{i!=k} (a_ik/2)||w_i - w_k||^2 (Section 2)."""
+    rng = np.random.default_rng(seed)
+    g = rand_graph(rng, m)
+    w = rng.standard_normal((m, d))
+    eta, tau = 0.7, 1.3
+    quad = float(g.penalty(jnp.asarray(w, jnp.float32), eta, tau))
+    a = g.adjacency
+    pair = sum(
+        a[i, k] / 2 * np.sum((w[i] - w[k]) ** 2)
+        for i in range(m) for k in range(m) if i != k
+    )
+    manual = eta / (2 * m) * np.sum(w * w) + tau / (2 * m) * pair
+    np.testing.assert_allclose(quad, manual, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(m=st.integers(3, 12), seed=st.integers(0, 1000),
+       alpha=st.floats(1e-4, 1e-2))
+def test_bol_mixing_rows_sum_to_one_minus_alpha_eta(m, seed, alpha):
+    """Section 5: sum_k mu_ki = 1 - alpha*eta (deviation from double
+    stochasticity that separates MTL from consensus)."""
+    g = rand_graph(np.random.default_rng(seed), m)
+    eta, tau = 0.9, 1.7
+    mu = g.bol_mixing(eta, tau, alpha)
+    np.testing.assert_allclose(mu.sum(axis=0), 1 - alpha * eta, atol=1e-8)
+
+
+@settings(deadline=None, max_examples=20)
+@given(m=st.integers(3, 12), seed=st.integers(0, 1000))
+def test_metric_inverse_eigs_bounded(m, seed):
+    """0 < eig(M^{-1}) <= 1, with exactly one unit eigenvalue iff connected."""
+    g = rand_graph(np.random.default_rng(seed), m)
+    minv = g.metric_inverse(1.0, 3.0)
+    eig = np.linalg.eigvalsh(minv)
+    assert eig[0] > 0 and eig[-1] <= 1 + 1e-9
+
+
+@settings(deadline=None, max_examples=15)
+@given(m=st.integers(2, 8), d=st.integers(1, 6), n=st.integers(3, 10),
+       seed=st.integers(0, 1000), alpha=st.floats(1e-3, 10.0))
+def test_prox_optimality(m, d, n, seed, alpha):
+    """prox output u satisfies (u - v)/alpha + grad F_hat_i(u) = 0."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, n, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    u = prox_squared_loss(v, x, y, alpha)
+    grad = jax.vmap(
+        lambda ui, xi, yi: (2.0 / n) * xi.T @ (xi @ ui - yi)
+    )(u, x, y)
+    resid = (u - v) / alpha + grad
+    assert float(jnp.max(jnp.abs(resid))) < 1e-3
+
+
+@settings(deadline=None, max_examples=20)
+@given(m=st.integers(4, 16), bw=st.integers(1, 3), B=st.floats(0.5, 3.0),
+       S=st.floats(0.01, 10.0))
+def test_rho_bounds(m, bw, B, S):
+    g = band_graph(m, min(bw, m // 2 - 1) or 1)
+    r = theory.rho(g, B, S)
+    assert -1e-12 <= r <= (m - 1) / m + 1e-12
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 100), m=st.integers(5, 15), k=st.integers(1, 4))
+def test_knn_graph_degree(seed, m, k):
+    rng = np.random.default_rng(seed)
+    k = min(k, m - 1)
+    g = knn_graph(rng.standard_normal((m, 4)), k=k)
+    deg = (g.adjacency > 0).sum(axis=1)
+    assert deg.min() >= k  # symmetrization only adds edges
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 1000), m=st.integers(3, 8), d=st.integers(2, 5))
+def test_erm_objective_convexity_along_segments(seed, m, d):
+    """f((w1+w2)/2) <= (f(w1)+f(w2))/2 for the ERM objective."""
+    rng = np.random.default_rng(seed)
+    g = rand_graph(rng, m)
+    problem = MultiTaskProblem(g, SQUARED, 0.3, 0.9)
+    x = jnp.asarray(rng.standard_normal((m, 6, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((m, 6)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    mid = problem.erm_objective((w1 + w2) / 2, x, y)
+    avg = (problem.erm_objective(w1, x, y) + problem.erm_objective(w2, x, y)) / 2
+    assert float(mid) <= float(avg) + 1e-5

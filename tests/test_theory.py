@@ -1,0 +1,102 @@
+"""Executable checks of the paper's statistical claims (Lemma 1, Corollary 2,
+Section 2 sample-complexity narrative, Lemma 4, Table 1 monotonicities)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    TaskGraph,
+    band_graph,
+    complete_graph,
+    disconnected_graph,
+    ring_graph,
+    theory,
+)
+
+
+def test_rho_range_and_extremes():
+    g = ring_graph(16)
+    B, L = 1.0, 1.0
+    # strongly related (S -> 0): rho -> 0
+    assert theory.rho(g, B, 1e-6) < 1e-9
+    # unrelated (S -> inf): rho -> (m-1)/m
+    assert abs(theory.rho(g, B, 1e6) - 15 / 16) < 1e-3
+    # disconnected graph: lambda_i = 0 for all -> rho = (m-1)/m regardless of S
+    gd = disconnected_graph(16)
+    assert abs(theory.rho(gd, B, 1.0) - 15 / 16) < 1e-12
+
+
+def test_rho_monotone_in_S():
+    g = band_graph(20, 3)
+    rhos = [theory.rho(g, 1.0, s) for s in [0.01, 0.1, 1.0, 10.0]]
+    assert all(a <= b + 1e-12 for a, b in zip(rhos, rhos[1:]))
+
+
+def test_corollary2_bound_interpolates():
+    m, n, L, B = 25, 100, 1.0, 1.0
+    g = complete_graph(m)
+    # related tasks: bound ~ LB/sqrt(mn); unrelated: ~ LB/sqrt(n)
+    related = theory.corollary2_bound(g, B, 1e-4, L, n)
+    unrelated = theory.corollary2_bound(disconnected_graph(m), B, 1.0, L, n)
+    assert related < 4 * L * B / math.sqrt(m * n) * 1.5
+    assert abs(unrelated - 4 * L * B * math.sqrt((1 / m + (m - 1) / m) / n)) < 1e-9
+    assert related < unrelated
+
+
+def test_lemma1_bound_decreases_with_regularization():
+    g = ring_graph(10)
+    b1 = theory.lemma1_bound(g, eta=0.1, tau=0.1, L=1.0, n=100)
+    b2 = theory.lemma1_bound(g, eta=1.0, tau=1.0, L=1.0, n=100)
+    assert b2 < b1
+
+
+def test_sample_complexity_gain():
+    m = 50
+    g = complete_graph(m)
+    n_l = theory.n_local(1.0, 1.0, 0.1)
+    n_c = theory.n_coupled(g, 1.0, 1e-3, 1.0, 0.1)
+    # related tasks: n_C ~ n_L/m  (paper Section 2)
+    assert n_c < n_l / m * 2
+    # unrelated tasks: no gain
+    n_c_far = theory.n_coupled(g, 1.0, 1e3, 1.0, 0.1)
+    assert n_c_far > 0.9 * n_l
+
+
+def test_gradient_variance_lemma4():
+    g = ring_graph(8)
+    sig_related = theory.gradient_variance_bound(g, 1.0, 1e-6, 1.0)
+    sig_unrelated = theory.gradient_variance_bound(g, 1.0, 1e6, 1.0)
+    m = 8
+    assert abs(sig_related - 4.0 / m**2) < 1e-6  # 1 + m*rho -> 1
+    assert sig_unrelated > sig_related * (m - 1)  # 1 + m*rho -> m
+
+
+def test_table1_structure():
+    g = band_graph(16, 2)
+    rows = theory.table1(g, B=1.0, S=0.5, L=1.0, eps=0.05)
+    by = {r.method: r for r in rows}
+    assert by["local"].comm_rounds == 0
+    # stochastic methods process only n_C samples (sample == processed)
+    assert by["stoch_ssr"].samples_processed_per_machine == pytest.approx(
+        by["stoch_ssr"].samples_per_machine
+    )
+    # ERM methods process n_C * rounds
+    assert by["erm_bsr"].samples_processed_per_machine > by["erm_bsr"].samples_per_machine
+    # BOL communicates |E|/m vectors per round vs BSR's m
+    assert by["erm_bol"].vectors_per_machine / by["erm_bol"].comm_rounds < by[
+        "erm_bsr"
+    ].vectors_per_machine / by["erm_bsr"].comm_rounds
+
+
+def test_theorem3_stepsizes_shapes():
+    theta, alpha = theory.theorem3_stepsizes(T=50, m=10, B=1.0, beta_f=2.0, sigma=0.5)
+    assert theta.shape == (50,) and alpha.shape == (50,)
+    assert np.all(np.diff(theta) > 0) and np.all(alpha > 0)
+
+
+def test_b_star_positive_and_monotone_in_n():
+    g = ring_graph(10)
+    b1 = theory.b_star(g, 1.0, 0.5, 1.0, 2.0, 1_000)
+    b2 = theory.b_star(g, 1.0, 0.5, 1.0, 2.0, 100_000)
+    assert 1 <= b1 < b2
