@@ -1,0 +1,11 @@
+# Tier-1 verification for every PR: `make ci` (or scripts/ci.sh) must be
+# green before merging.
+.PHONY: ci test bench-serve
+
+ci: test
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-serve:
+	PYTHONPATH=src python benchmarks/serve_throughput.py

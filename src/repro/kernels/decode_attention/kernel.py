@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 DEFAULT_BLOCK_S = 256
 NEG_INF = -1e30
 
@@ -87,12 +89,14 @@ def decode_attention_pallas(
     q: jax.Array,  # (B, KVH, G, hd)
     k: jax.Array,  # (B, S, KVH, hd)
     v: jax.Array,  # (B, S, KVH, hd)
-    pos: jax.Array,  # () int32
+    pos: jax.Array,  # () int32 shared, or (B,) per-slot decode positions
     *,
     block_s: int = DEFAULT_BLOCK_S,
     window: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    # TPU-only primitives (pltpu VMEM scratch): interpret off-TPU by default
+    interpret = resolve_interpret(interpret, tpu_only=True)
     b, kvh, g, hd = q.shape
     s = k.shape[1]
     g_pad = (-g) % 8
@@ -105,7 +109,11 @@ def decode_attention_pallas(
         v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
     gp, sp = g + g_pad, s + s_pad
     scale = float(1.0 / (hd ** 0.5))
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    # per-slot positions: one (1, 1) SMEM-sized block per batch row, so each
+    # grid row masks against ITS slot's decode depth (continuous batching)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32), (b,)
+    ).reshape(b, 1)
 
     kernel = functools.partial(
         _decode_kernel, block_s=block_s, scale=scale, window=window
@@ -114,7 +122,7 @@ def decode_attention_pallas(
         kernel,
         grid=(b, kvh, sp // block_s),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bb, hh, ss: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, ss: (bb, 0)),
             pl.BlockSpec((1, gp, hd), lambda bb, hh, ss: (bb * kvh + hh, 0, 0)),
             pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),
             pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),

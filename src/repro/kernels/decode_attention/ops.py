@@ -1,6 +1,7 @@
 """Public op: decode_attention — accepts model-layout tensors
-(q (B, 1, H, hd), caches (B, S, KVH, hd)) and dispatches to the Pallas
-kernel (interpret mode off-TPU)."""
+(q (B, 1, H, hd), caches (B, S, KVH, hd), pos () or (B,) per-slot) and
+dispatches to the Pallas kernel (compiled on TPU, interpret mode elsewhere —
+see repro.kernels.runtime)."""
 import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
@@ -10,7 +11,7 @@ def decode_attention(
     q: jax.Array,  # (B, 1, H, hd)
     k_cache: jax.Array,  # (B, S, KVH, hd)
     v_cache: jax.Array,
-    pos: jax.Array,
+    pos: jax.Array,  # () shared or (B,) per-slot decode positions
     *,
     window: int | None = None,
     block_s: int = 256,
@@ -18,9 +19,7 @@ def decode_attention(
     b, one, h, hd = q.shape
     kvh = k_cache.shape[2]
     qg = q.reshape(b, kvh, h // kvh, hd)
-    on_tpu = jax.default_backend() == "tpu"
     out = decode_attention_pallas(
-        qg, k_cache, v_cache, pos,
-        block_s=block_s, window=window, interpret=not on_tpu,
+        qg, k_cache, v_cache, pos, block_s=block_s, window=window
     )
     return out.reshape(b, 1, h, hd)

@@ -19,10 +19,11 @@ def decode_attention_reference(
         "bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * scale
     kv_pos = jnp.arange(k.shape[1])
-    mask = kv_pos <= pos
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (q.shape[0],))  # () or (B,)
+    mask = kv_pos[None, :] <= pos_b[:, None]
     if window is not None:
-        mask &= kv_pos > pos - window
-    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+        mask &= kv_pos[None, :] > pos_b[:, None] - window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
 
 DEFAULT_BLOCK_D = 512
 
@@ -43,12 +44,14 @@ def graph_mix_pallas(
     theta: jax.Array,
     *,
     block_d: int = DEFAULT_BLOCK_D,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """mu: (m, m) float32; theta: (m, d). Returns mu^T @ theta, theta.dtype.
 
     d is padded to a multiple of block_d; m padded to a multiple of 8.
+    interpret=None auto-detects: compiled on TPU/GPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     m, d = theta.shape
     assert mu.shape == (m, m)
     m_pad = (-m) % 8

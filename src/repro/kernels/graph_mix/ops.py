@@ -1,6 +1,6 @@
-"""Public op: graph_mix — jit'd wrapper that picks the Pallas kernel on TPU
-and interpret mode (still the Pallas kernel body, executed in Python) on CPU.
-"""
+"""Public op: graph_mix — jit'd wrapper over the Pallas kernel (compiled on
+TPU/GPU, interpret mode — the real kernel body executed in Python —
+elsewhere; see repro.kernels.runtime)."""
 import jax
 
 from repro.kernels.graph_mix.kernel import graph_mix_pallas
@@ -12,5 +12,4 @@ def graph_mix(mu: jax.Array, theta: jax.Array, *, block_d: int = 512) -> jax.Arr
     mu: (m, m) mixing weights (column i = weights into task i);
     theta: (m, d) stacked parameters.
     """
-    on_tpu = jax.default_backend() == "tpu"
-    return graph_mix_pallas(mu, theta, block_d=block_d, interpret=not on_tpu)
+    return graph_mix_pallas(mu, theta, block_d=block_d)

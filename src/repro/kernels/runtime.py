@@ -1,0 +1,26 @@
+"""Backend detection for the Pallas kernels.
+
+The kernels default to compiled execution on accelerators and interpreter
+mode elsewhere (CPU test runs execute the real kernel bodies in Python).
+Callers can always override with an explicit ``interpret=`` argument — CPU
+tests pass ``interpret=True`` so they stay deterministic regardless of the
+machine they run on.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(*, tpu_only: bool = False) -> bool:
+    """True when the Pallas kernel should run in interpreter mode.
+
+    tpu_only: kernels using TPU-specific primitives (pltpu scratch/grid
+    semantics) can only compile on TPU; generic kernels also compile on GPU
+    via the Triton lowering.
+    """
+    backends = ("tpu",) if tpu_only else ("tpu", "gpu")
+    return jax.default_backend() not in backends
+
+
+def resolve_interpret(interpret: bool | None, *, tpu_only: bool = False) -> bool:
+    return default_interpret(tpu_only=tpu_only) if interpret is None else interpret

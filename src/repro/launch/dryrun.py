@@ -190,7 +190,10 @@ def lower_and_compile(cfg, shape, ax, mesh, save_hlo_to=None, microbatches=1):
         compiled = lowered.compile()
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # list[dict] on current JAX
+        cost = cost[0] if cost else {}
+    cost = cost or {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     if save_hlo_to:

@@ -123,8 +123,10 @@ def decode_attend(
 ) -> Array:
     """Single-token attention against a cache.
 
-    q: (B, 1, H, hd); caches: (B, max_seq, KVH, hd); pos: () current index
-    (the new token's position; cache already contains it). Returns (B,1,H,hd).
+    q: (B, 1, H, hd); caches: (B, max_seq, KVH, hd); pos: () shared index or
+    (B,) per-slot indices (the new token's position; cache already contains
+    it) — per-slot positions are how the continuous batcher advances slots at
+    different depths in one dispatch. Returns (B, 1, H, hd).
     """
     b, _, h, hd = q.shape
     kvh = k_cache.shape[2]
@@ -138,10 +140,11 @@ def decode_attend(
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
     scores = scores * scale  # (B, KVH, G, S)
     kv_pos = jnp.arange(k_cache.shape[1])
-    mask = kv_pos <= pos
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    mask = kv_pos[None, :] <= pos_b[:, None]  # (B, S)
     if sliding_window is not None:
-        mask &= kv_pos > pos - sliding_window
-    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+        mask &= kv_pos[None, :] > pos_b[:, None] - sliding_window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(q.dtype), v_cache)
     return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
@@ -195,13 +198,15 @@ def mla_full(params, x, dims: MLADims, positions, theta, q_chunk=1024):
 def mla_decode(params, x, dims: MLADims, c_cache, krope_cache, pos, theta):
     """Absorbed-matrix MLA decode: score/value contractions happen in the
     compressed c_kv space, so the per-token cache is (kv_lora + qk_rope) —
-    the whole point of MLA. x: (B, 1, d); caches already contain this token.
+    the whole point of MLA. x: (B, 1, d); caches already contain this token;
+    pos: () shared or (B,) per-slot positions.
     """
     b, _, d = x.shape
     h, dn, dr, dv, r = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_dim, dims.kv_lora
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
     q = matmul(x, params["wq"]).reshape(b, 1, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = apply_rope(q_rope, jnp.full((b, 1), pos), theta)
+    q_rope = apply_rope(q_rope, pos_b[:, None], theta)
     # absorb W_uk into the query: q' = q_nope @ W_uk^T per head -> r-dim
     w_uk = params["w_uk"].reshape(r, h, dn)
     q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
@@ -210,8 +215,8 @@ def mla_decode(params, x, dims: MLADims, c_cache, krope_cache, pos, theta):
         jnp.einsum("bqhr,bkr->bhqk", q_c, c_cache.astype(jnp.float32))
         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32))
     ) * scale
-    mask = jnp.arange(c_cache.shape[1]) <= pos
-    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos_b[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))  # (B,1,H,r)
     w_uv = params["w_uv"].reshape(r, h, dv)

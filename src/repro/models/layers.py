@@ -25,6 +25,22 @@ def matmul(x: Array, w: Array) -> Array:
     ).astype(x.dtype)
 
 
+def freeze_dead_slots(new_state, old_state, live):
+    """Slot-masked recurrent-state update for batched serving: keep the
+    state of dead slots (live=False) frozen. Unlike position-indexed KV
+    caches, SSM/xLSTM states are cumulative, so a masked-out slot must not
+    absorb the padding token a batched decode tick feeds it. live: (B,)
+    bool or None (no masking); states are pytrees of (B, ...) leaves."""
+    if live is None:
+        return new_state
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            live.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+        ),
+        new_state, old_state,
+    )
+
+
 # -------------------------------------------------------------------- norms
 def rms_norm(x: Array, gain: Array | None, eps: float = 1e-6) -> Array:
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)

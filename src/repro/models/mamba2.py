@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, matmul, rms_norm
+from repro.models.layers import dense_init, freeze_dead_slots, matmul, rms_norm
 
 Array = jax.Array
 
@@ -123,8 +123,10 @@ def mamba2_full(params, x, *, d_state: int, head_dim: int, chunk: int = 256):
     return matmul(y, params["w_out"]), (conv_tail, s_final)
 
 
-def mamba2_step(params, x, state, *, d_state: int, head_dim: int):
-    """Single-token decode. x: (B, 1, d_model); state = (conv_tail, ssm)."""
+def mamba2_step(params, x, state, *, d_state: int, head_dim: int, live=None):
+    """Single-token decode. x: (B, 1, d_model); state = (conv_tail, ssm);
+    live: optional (B,) bool — slots with live=False emit garbage output but
+    keep their state untouched (continuous-batching dead slots)."""
     bsz, _, d_model = x.shape
     conv_tail, ssm = state  # (B, K-1, conv_dim), (B, nh, hd, ds)
     z, xbc, dt, d_inner, nh = _split_proj(params, x, d_model, d_state, head_dim)
@@ -147,4 +149,5 @@ def mamba2_step(params, x, state, *, d_state: int, head_dim: int):
     y = y + params["d_skip"][None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), params["norm_gain"])
-    return matmul(y, params["w_out"]), (new_tail, ssm_new)
+    new_state = freeze_dead_slots((new_tail, ssm_new), state, live)
+    return matmul(y, params["w_out"]), new_state

@@ -419,16 +419,21 @@ class TransformerLM:
         return logits, caches
 
     @staticmethod
-    def _cache_write(cache, new, pos):
+    def _cache_write(cache, new, pos, live=None):
         """Sharding-friendly cache write: masked select along the sequence
         dim instead of dynamic_update_slice — each shard writes locally, so
         sequence-sharded KV caches (flash-decode layout) never get gathered.
-        cache: (B, S, ...), new: (B, 1, ...)."""
+        cache: (B, S, ...), new: (B, 1, ...), pos: (B,) per-slot positions,
+        live: optional (B,) bool — dead slots keep their cache untouched."""
         s = cache.shape[1]
-        mask = (jnp.arange(s) == pos).reshape((1, s) + (1,) * (cache.ndim - 2))
+        mask = jnp.arange(s)[None, :] == pos[:, None]  # (B, S)
+        if live is not None:
+            mask &= live[:, None]
+        mask = mask.reshape(mask.shape + (1,) * (cache.ndim - 2))
         return jnp.where(mask, new.astype(cache.dtype), cache)
 
-    def _block_decode(self, kind, p, x, cache, pos, router_bias):
+    def _block_decode(self, kind, p, x, cache, pos, router_bias, live=None):
+        """pos: (B,) per-slot positions; live: optional (B,) slot mask."""
         c = self.cfg
         if kind in ("attn", "attn_moe", "shared_attn"):
             h = apply_norm(c.norm_kind, x, p["norm1"] or None)
@@ -437,11 +442,11 @@ class TransformerLM:
                 c_kv = matmul(h, p["attn"]["w_dkv"])  # (B, 1, r)
                 k_rope = attn_lib.apply_rope(
                     matmul(h, p["attn"]["w_krope"])[:, :, None, :],
-                    jnp.full((h.shape[0], 1), pos),
+                    pos[:, None],
                     c.rope_theta,
                 )[:, :, 0, :]
-                c_cache = self._cache_write(c_cache, c_kv, pos)
-                r_cache = self._cache_write(r_cache, k_rope, pos)
+                c_cache = self._cache_write(c_cache, c_kv, pos, live)
+                r_cache = self._cache_write(r_cache, k_rope, pos, live)
                 out = attn_lib.mla_decode(
                     p["attn"], h, self._mla_dims(), c_cache, r_cache, pos,
                     c.rope_theta,
@@ -452,11 +457,11 @@ class TransformerLM:
                 q, k, v = attn_lib.gqa_project(
                     p["attn"], h, c.num_heads, c.num_kv_heads, c.head_dim
                 )
-                posv = jnp.full((h.shape[0], 1), pos)
+                posv = pos[:, None]
                 q = attn_lib.apply_rope(q, posv, c.rope_theta)
                 k = attn_lib.apply_rope(k, posv, c.rope_theta)
-                k_cache = self._cache_write(k_cache, k, pos)
-                v_cache = self._cache_write(v_cache, v, pos)
+                k_cache = self._cache_write(k_cache, k, pos, live)
+                v_cache = self._cache_write(v_cache, v, pos, live)
                 o = attn_lib.decode_attend(
                     q, k_cache, v_cache, pos, sliding_window=c.sliding_window
                 )
@@ -479,23 +484,36 @@ class TransformerLM:
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
             out, state = mamba_lib.mamba2_step(
-                p["mamba"], h, cache, d_state=c.ssm_state, head_dim=c.ssm_head_dim
+                p["mamba"], h, cache, d_state=c.ssm_state,
+                head_dim=c.ssm_head_dim, live=live,
             )
             return x + out, state
         if kind == "mlstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
-            out, state = xlstm_lib.mlstm_step(p["mlstm"], h, cache, n_heads=c.num_heads)
+            out, state = xlstm_lib.mlstm_step(
+                p["mlstm"], h, cache, n_heads=c.num_heads, live=live
+            )
             return x + out, state
         if kind == "slstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
-            out, state = xlstm_lib.slstm_step(p["slstm"], h, cache, n_heads=c.num_heads)
+            out, state = xlstm_lib.slstm_step(
+                p["slstm"], h, cache, n_heads=c.num_heads, live=live
+            )
             return x + out, state
         raise ValueError(kind)
 
-    def decode_step(self, params, batch, caches, pos):
+    def decode_step(self, params, batch, caches, pos, live=None):
         """One-token decode. batch: {'tokens': (B,1[,K]) [, task_ids, vlm...]}.
+
+        pos: () shared position or (B,) PER-SLOT positions — the vectorized
+        continuous-batching path advances every slot at its own depth in one
+        dispatch. live: optional (B,) bool; dead slots run through the math
+        (their lane is padding) but their KV/recurrent state is left
+        untouched, so a freed slot can be re-admitted later.
         Returns (logits (B,1,[K,]V), new caches)."""
         x = self._constrain(self._embed(params, batch))
+        b = x.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
         rb = self._router_bias(params, batch, 1)
         new_caches = []
         for si, pat in enumerate(self._stage_patterns()):
@@ -512,7 +530,7 @@ class TransformerLM:
                         else slot_params.get(f"slot{j}")
                     )
                     h, nc = self._block_decode(
-                        kind, p, h, slot_caches[f"slot{j}"], pos, rb
+                        kind, p, h, slot_caches[f"slot{j}"], pos, rb, live
                     )
                     out_caches[f"slot{j}"] = nc
                 return h, out_caches

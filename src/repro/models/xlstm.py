@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, matmul, rms_norm
+from repro.models.layers import dense_init, freeze_dead_slots, matmul, rms_norm
 
 Array = jax.Array
 
@@ -128,10 +128,11 @@ def mlstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
     return matmul(h, params["w_down"]), state
 
 
-def mlstm_step(params, x, state, *, n_heads: int):
-    """Single-token decode; state O(1) in sequence length."""
-    y, state = mlstm_full(params, x, n_heads=n_heads, state=state, chunk=0)
-    return y, state
+def mlstm_step(params, x, state, *, n_heads: int, live=None):
+    """Single-token decode; state O(1) in sequence length. live: optional
+    (B,) bool slot mask for continuous batching."""
+    y, new_state = mlstm_full(params, x, n_heads=n_heads, state=state, chunk=0)
+    return y, freeze_dead_slots(new_state, state, live)
 
 
 # ----------------------------------------------- chunkwise-parallel mLSTM
@@ -257,5 +258,6 @@ def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
     return matmul(h, params["w_out"]), state
 
 
-def slstm_step(params, x, state, *, n_heads: int):
-    return slstm_full(params, x, n_heads=n_heads, state=state)
+def slstm_step(params, x, state, *, n_heads: int, live=None):
+    y, new_state = slstm_full(params, x, n_heads=n_heads, state=state)
+    return y, freeze_dead_slots(new_state, state, live)

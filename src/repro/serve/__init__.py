@@ -1,1 +1,3 @@
 from repro.serve.engine import generate, ServeEngine
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.step import make_serve_step

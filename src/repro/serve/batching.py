@@ -1,26 +1,45 @@
-"""Continuous batching for the serving path.
+"""Continuous batching for the serving path — vectorized per-slot-position
+decode.
 
-A fixed pool of decode slots; requests join as slots free up, each slot
-tracks its own position, and one jitted decode step advances every active
-slot per tick (inactive slots are masked). This is the standard production
-serving pattern (vLLM/TGI-style slot scheduler) built on the cache API —
-the decode step itself is the same `model.decode_step` the dry-run lowers.
+A fixed pool of decode slots; requests join as slots free up and each slot
+tracks its own position. One jitted dispatch per tick advances EVERY live
+slot one token at its own position (``model.decode_step`` takes a (B,)
+position vector and a (B,) live mask): decode cost is O(1) dispatches in the
+slot count, the vLLM/TGI-style scheduling loop this system needs before
+paged caches and multi-host serving.
 
-Simplification vs a full production scheduler (documented): all slots share
-one cache buffer of ``max_seq`` and positions are per-slot, but the jitted
-step advances the GLOBAL tick, writing each slot at its own offset via the
-masked cache write; prompts are prefilled one slot at a time.
+Design (shared with ``ServeEngine`` via ``repro.serve.step`` so the two
+serving paths cannot drift):
+
+  * decode — ``tick()`` issues exactly one jitted dispatch regardless of
+    ``num_slots``; dead slots ride along on a padding token with their
+    KV/recurrent state frozen by the model's masked writes.
+  * prefill — admission writes whole (num_slots, C) prompt slices per
+    dispatch (ceil(max_prompt_len / C) dispatches per admission round, all
+    newly admitted slots prefilled together), with per-token validity masks
+    for heterogeneous prompt lengths.
+  * slot reuse — re-admission restores the slot's state to the pristine
+    ``init_cache`` value inside the prefill dispatch (recurrent SSM/xLSTM
+    states are cumulative and MUST be cleared; the mLSTM stabilizer resets
+    to -inf, not 0).
+  * multi-task — each request carries a ``task_id``; heterogeneous tasks
+    share a tick and pick up their own personalization (the paper's
+    graph-mixed per-task parameters) through the model's task embedding
+    lookups.
+
+``decode_dispatches`` / ``prefill_dispatches`` / ``ticks`` count real jitted
+calls so tests and ``benchmarks/serve_throughput.py`` can assert the O(1)
+dispatch property.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
+from repro.serve.step import make_serve_step
 
 
 @dataclasses.dataclass
@@ -34,105 +53,129 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching engine."""
+    """Slot-based continuous batching engine (one dispatch per tick)."""
 
-    def __init__(self, model: TransformerLM, params, num_slots: int, max_seq: int):
+    def __init__(
+        self,
+        model: TransformerLM,
+        params,
+        num_slots: int,
+        max_seq: int,
+        prefill_chunk: int = 16,
+    ):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
-        cfg = model.cfg
+        self.prefill_chunk = prefill_chunk
         self.caches = model.init_cache(num_slots, max_seq)
-        self._empty = model.init_cache(num_slots, max_seq)  # pristine states
         self.pos = np.zeros(num_slots, np.int32)  # next write position
         self.active: list[Request | None] = [None] * num_slots
         self.queue: list[Request] = []
         self.finished: list[Request] = []
-
-        def step(params, tokens, task_ids, caches, positions, live):
-            """Advance every slot one token at its own position."""
-            batch = {"tokens": tokens, "task_ids": task_ids}
-            # per-slot positions: run decode per slot via vmap over the batch
-            # with a shared global cache — the model's decode_step uses a
-            # single pos; we call it per unique position group by masking.
-            logits, new_caches = model.decode_step(
-                params, batch, caches, positions
-            )
-            next_tok = jnp.argmax(logits[:, 0], axis=-1)
-            # only live slots advance their caches
-            merged = jax.tree.map(
-                lambda new, old: jnp.where(
-                    live.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old
-                ),
-                new_caches, caches,
-            )
-            return next_tok, merged
-
-        self._step = jax.jit(step)
+        self.ticks = 0
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+        self._tick_fn, self._prefill_fn = make_serve_step(model, max_seq)
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: Request):
+        if len(req.tokens) >= self.max_seq:
+            raise ValueError(
+                f"prompt of {len(req.tokens)} tokens cannot fit a "
+                f"max_seq={self.max_seq} cache (needs room for >=1 "
+                "generated token)"
+            )
         self.queue.append(req)
 
-    def _reset_slot(self, slot: int):
-        """Clear a slot for reuse: position back to 0 and recurrent/KV state
-        zeroed (attention caches are masked by position, but SSM/xLSTM
-        states are cumulative and MUST be cleared)."""
-        self.pos[slot] = 0
-        zero_slot = jnp.zeros(self.num_slots, bool).at[slot].set(True)
-
-        def clear(c, empty):
-            mask = zero_slot.reshape((1, -1) + (1,) * (c.ndim - 2))
-            return jnp.where(mask, empty, c)
-
-        self.caches = jax.tree.map(clear, self.caches, self._empty)
-
-    def _admit(self):
-        for s in range(self.num_slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[s] = req
-                # prefill this slot: write prompt tokens one-by-one (simple,
-                # correct; a production engine would batch the prefill). The
-                # logits after the LAST prompt token are the first generated
-                # token — emit them.
-                toks = np.asarray(req.tokens, np.int32)
-                for t_idx, tok in enumerate(toks):
-                    self._advance_single(
-                        s, int(tok), emit=(t_idx == len(toks) - 1)
-                    )
-
-    def _advance_single(self, slot: int, token: int, emit: bool):
-        tokens = np.zeros((self.num_slots, 1), np.int32)
-        tokens[slot, 0] = token
-        task_ids = np.array(
+    def _task_ids(self) -> np.ndarray:
+        return np.array(
             [r.task_id if r else 0 for r in self.active], np.int32
         )
-        live = np.zeros(self.num_slots, bool)
-        live[slot] = True
-        nxt, self.caches = self._step(
-            self.params, jnp.asarray(tokens), jnp.asarray(task_ids),
-            self.caches, jnp.asarray(self.pos[slot]), jnp.asarray(live),
+
+    def _finish_ready(self):
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None  # state cleared on re-admission
+
+    def _admit(self):
+        """Fill free slots from the queue, then prefill ALL newly admitted
+        prompts together in chunked dispatches (whole (num_slots, C) slices
+        per dispatch, per-token validity for unequal prompt lengths)."""
+        newly = []
+        for s in range(self.num_slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.pop(0)
+                self.pos[s] = 0
+                newly.append(s)
+        if not newly:
+            return
+        task_ids = jnp.asarray(self._task_ids())
+        reset = np.zeros(self.num_slots, bool)
+        reset[newly] = True
+        maxlen = max(len(self.active[s].tokens) for s in newly)
+        c = self.prefill_chunk
+        first_logits = np.zeros(self.num_slots, object)
+        for c0 in range(0, maxlen, c):
+            tokens = np.zeros((self.num_slots, c), np.int32)
+            valid = np.zeros((self.num_slots, c), bool)
+            for s in newly:
+                t = np.asarray(self.active[s].tokens, np.int32)[c0 : c0 + c]
+                tokens[s, : len(t)] = t
+                valid[s, : len(t)] = True
+            last, self.caches, positions = self._prefill_fn(
+                self.params, jnp.asarray(tokens), task_ids, self.caches,
+                jnp.asarray(self.pos), jnp.asarray(valid),
+                jnp.asarray(reset), {},
+            )
+            self.prefill_dispatches += 1
+            self.pos = np.asarray(positions)
+            reset = np.zeros(self.num_slots, bool)
+            last_np = np.asarray(last)
+            for s in newly:
+                if valid[s].any():  # prompt reached into this chunk
+                    first_logits[s] = last_np[s]
+        # the logits after each prompt's LAST token are the first generated
+        # token — emit them (greedy), exactly like the engine's prefill.
+        for s in newly:
+            self.active[s].out.append(int(np.argmax(first_logits[s])))
+
+    def tick(self):
+        """Advance every live slot one token — exactly ONE jitted dispatch
+        regardless of how many slots are live or at which positions."""
+        live = np.array([r is not None for r in self.active])
+        if not live.any():
+            return
+        tokens = np.zeros(self.num_slots, np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                tokens[s] = req.out[-1] if req.out else int(req.tokens[-1])
+        next_tok, _, self.caches = self._tick_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(self._task_ids()),
+            self.caches, jnp.asarray(self.pos), jnp.asarray(live),
         )
-        self.pos[slot] += 1
-        if emit:
-            self.active[slot].out.append(int(nxt[slot]))
-        return int(nxt[slot])
+        self.ticks += 1
+        self.decode_dispatches += 1
+        self.pos = self.pos + live.astype(np.int32)
+        next_np = np.asarray(next_tok)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                req.out.append(int(next_np[s]))
 
     def run(self, max_ticks: int = 10_000):
-        """Drive until all submitted requests finish."""
-        tick = 0
-        while (self.queue or any(self.active)) and tick < max_ticks:
-            tick += 1
+        """Drive until all submitted requests finish (or this call has spent
+        ``max_ticks`` ticks — the budget is per call, not lifetime)."""
+        start = self.ticks
+        while self.queue or any(r is not None for r in self.active):
             self._admit()
-            for s, req in enumerate(self.active):
-                if req is None:
-                    continue
-                last = req.out[-1] if req.out else int(req.tokens[-1])
-                tok = self._advance_single(s, last, emit=True)
-                if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
-                    req.done = True
-                    self.finished.append(req)
-                    self.active[s] = None
-                    self._reset_slot(s)
+            self._finish_ready()  # prefill alone may satisfy max_new
+            if any(r is not None for r in self.active):
+                if self.ticks - start >= max_ticks:
+                    break
+                self.tick()
+                self._finish_ready()
         return self.finished

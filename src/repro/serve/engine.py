@@ -1,13 +1,16 @@
-"""Batched serving: prefill + greedy/temperature decode over the cache API.
+"""Batched serving: chunked prefill + greedy/temperature decode, delegating
+to the shared vectorized step in ``repro.serve.step``.
 
-``ServeEngine`` jits the prefill and decode steps once per (batch, seq)
-shape; ``generate`` is the convenience wrapper used by the examples and the
-serving benchmark.
+``ServeEngine`` drives the SAME jitted (prefill_chunk, decode_tick) pair the
+continuous batcher uses — one decode dispatch per generated token for the
+whole batch, ceil(S0 / prefill_chunk) dispatches for the prompt — so greedy
+output is token-for-token identical between the two serving paths.
+``generate`` is the convenience wrapper used by the examples and the serving
+benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -15,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
+from repro.serve.step import make_serve_step
 
 
 def _sample(logits, key, temperature: float):
@@ -28,12 +32,50 @@ class ServeEngine:
     model: TransformerLM
     params: Any
     max_seq: int
+    prefill_chunk: int = 32
 
     def __post_init__(self):
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, self.max_seq)
-        )
-        self._decode = jax.jit(self.model.decode_step)
+        self._tick, self._prefill = make_serve_step(self.model, self.max_seq)
+
+    def _prefill_prompt(self, prompt_batch, task_ids):
+        """Chunked prefill: ceil(S0 / prefill_chunk) dispatches, each writing
+        a whole (B, C) prompt slice. Returns (last-token logits, caches,
+        positions)."""
+        cfg = self.model.cfg
+        toks = jnp.asarray(prompt_batch["tokens"])
+        b, s0 = toks.shape[:2]
+        caches = self.model.init_cache(b, self.max_seq)
+        positions = jnp.zeros(b, jnp.int32)
+        reset = jnp.ones(b, bool)  # fresh caches; reset is a no-op but keeps
+        # the dispatch identical to the batcher's admission path
+        # fixed chunk width: one stable (b, chunk) jit shape for all prompt
+        # lengths (short prompts/tails ride on the validity mask)
+        chunk = self.prefill_chunk
+        last = None
+        for c0 in range(0, s0, chunk):
+            n = min(chunk, s0 - c0)
+            pad = chunk - n
+
+            def slab(t):
+                t = t[:, c0 : c0 + n]
+                if pad:
+                    t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                return t
+
+            chunk_toks = slab(toks)
+            valid = jnp.pad(jnp.ones((b, n), bool), ((0, 0), (0, pad)))
+            extras = {}
+            if cfg.input_mode == "vlm":
+                extras = {
+                    "vision_embeds": slab(jnp.asarray(prompt_batch["vision_embeds"])),
+                    "vision_mask": slab(jnp.asarray(prompt_batch["vision_mask"])),
+                }
+            last, caches, positions = self._prefill(
+                self.params, chunk_toks, task_ids, caches, positions,
+                valid, reset, extras,
+            )
+            reset = jnp.zeros(b, bool)
+        return last, caches, positions
 
     def generate(
         self,
@@ -44,31 +86,26 @@ class ServeEngine:
     ) -> np.ndarray:
         """prompt_batch: model inputs with (B, S0) tokens. Returns the
         generated token ids (B, num_tokens[, K])."""
-        cfg = self.model.cfg
         if key is None:
             key = jax.random.PRNGKey(0)
         b, s0 = prompt_batch["tokens"].shape[:2]
         assert s0 + num_tokens <= self.max_seq
-        logits, caches = self._prefill(self.params, prompt_batch)
+        task_ids = jnp.asarray(
+            prompt_batch.get("task_ids", jnp.zeros(b, jnp.int32))
+        )
+        logits, caches, positions = self._prefill_prompt(prompt_batch, task_ids)
+        live = jnp.ones(b, bool)
         outs = []
-        tok = _sample(logits[:, -1], key, temperature)
-        for t in range(num_tokens):
+        tok = _sample(logits, key, temperature)
+        for _ in range(num_tokens):
             outs.append(np.asarray(tok))
-            step_batch = {"task_ids": prompt_batch.get("task_ids", jnp.zeros(b, jnp.int32))}
-            if cfg.input_mode == "audio":
-                step_batch["tokens"] = tok.reshape(b, 1, cfg.num_codebooks)
-            else:
-                step_batch["tokens"] = tok.reshape(b, 1)
-                if cfg.input_mode == "vlm":
-                    step_batch["vision_embeds"] = jnp.zeros(
-                        (b, 1, cfg.d_model), jnp.float32
-                    )
-                    step_batch["vision_mask"] = jnp.zeros((b, 1), bool)
             key, sub = jax.random.split(key)
-            logits, caches = self._decode(
-                self.params, step_batch, caches, s0 + t
+            greedy, logits, caches = self._tick(
+                self.params, tok.astype(jnp.int32), task_ids, caches,
+                positions, live,
             )
-            tok = _sample(logits[:, 0], sub, temperature)
+            positions = positions + 1
+            tok = greedy if temperature <= 0.0 else _sample(logits, sub, temperature)
         return np.stack(outs, axis=1)
 
 

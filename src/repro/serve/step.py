@@ -1,0 +1,124 @@
+"""Shared vectorized serving step: one jitted dispatch per decode tick.
+
+Both serving front-ends (``ServeEngine`` for uniform batches and
+``ContinuousBatcher`` for slot scheduling) delegate to the two functions
+built here, so their numerics cannot drift — greedy decoding is
+token-for-token identical between them by construction.
+
+``make_serve_step(model, max_seq)`` returns two jitted callables:
+
+  * ``decode_tick(params, tokens, task_ids, caches, positions, live)`` —
+    advance EVERY slot one token at its own position ``positions[b]`` in a
+    single dispatch. Dead slots (``live[b] == False``) run through the math
+    on a padding token but their KV/recurrent state is left untouched by the
+    model's masked cache writes. Returns (greedy next token, step logits,
+    new caches).
+
+  * ``prefill_chunk(params, tokens, task_ids, caches, positions, valid,
+    reset, extras)`` — write a whole (B, C) prompt slice in one dispatch via
+    an in-graph ``lax.scan`` of the same decode step (so prefill numerics ==
+    decode numerics exactly). ``valid[b, i]`` marks real prompt tokens
+    (slots admitted with shorter prompts, or slots not being prefilled at
+    all, are padding); ``reset[b]`` restores a slot's state to the pristine
+    ``init_cache`` value before writing (recurrent states are cumulative and
+    must be cleared on slot reuse). Returns (logits after each slot's last
+    valid token, new caches, advanced positions).
+
+Chunked prefill costs ceil(S0 / C) dispatches per admission round instead
+of S0; the decode path is exactly one dispatch per tick regardless of slot
+count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import TransformerLM
+
+
+def make_step_batch(cfg, step_tokens, task_ids, extras=None):
+    """Assemble a one-token decode batch.
+
+    step_tokens: (B,) int32 — or (B, K) for audio codebooks. extras carries
+    per-position VLM inputs ((B, d) embeds + (B,) mask); absent extras mean
+    pure-text positions (zero embeds, False mask)."""
+    batch = {"tokens": step_tokens[:, None], "task_ids": task_ids}
+    if cfg.input_mode == "vlm":
+        b = step_tokens.shape[0]
+        if extras:
+            batch["vision_embeds"] = extras["vision_embeds"][:, None]
+            batch["vision_mask"] = extras["vision_mask"][:, None]
+        else:
+            batch["vision_embeds"] = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+            batch["vision_mask"] = jnp.zeros((b, 1), bool)
+    return batch
+
+
+def _logits_shape(cfg, b):
+    if cfg.num_codebooks > 1:
+        return (b, cfg.num_codebooks, cfg.vocab_size)
+    return (b, cfg.vocab_size)
+
+
+@functools.lru_cache(maxsize=None)
+def make_serve_step(model: TransformerLM, max_seq: int):
+    """Build the (decode_tick, prefill_chunk) pair for one model/cache size.
+
+    Memoized on (model, max_seq) — both are frozen/hashable — so every
+    engine/batcher instance over the same model shares one compiled pair
+    instead of re-jitting per instance."""
+    cfg = model.cfg
+
+    def decode_tick(params, tokens, task_ids, caches, positions, live):
+        batch = make_step_batch(cfg, tokens, task_ids)
+        logits, new_caches = model.decode_step(
+            params, batch, caches, positions, live=live
+        )
+        step_logits = logits[:, 0]  # (B, [K,] V)
+        next_tok = jnp.argmax(step_logits, axis=-1)
+        return next_tok, step_logits, new_caches
+
+    def prefill_chunk(
+        params, tokens, task_ids, caches, positions, valid, reset, extras
+    ):
+        b = tokens.shape[0]
+        # restore (re)admitted slots to the pristine init_cache state — the
+        # initial values are not all zeros (mLSTM stabilizer m0 = -1e30), so
+        # the reference states are traced in as constants, not zeros_like.
+        empty = model.init_cache(b, max_seq)
+
+        def clear(c, e):
+            m = reset.reshape((1, -1) + (1,) * (c.ndim - 2))
+            return jnp.where(m, e, c)
+
+        caches = jax.tree.map(clear, caches, empty)
+        last0 = jnp.zeros(_logits_shape(cfg, b), jnp.float32)
+
+        def body(carry, inp):
+            caches, positions, last = carry
+            tok, vld, ext = inp
+            batch = make_step_batch(cfg, tok, task_ids, extras=ext)
+            logits, caches = model.decode_step(
+                params, batch, caches, positions, live=vld
+            )
+            step = logits[:, 0]
+            keep = vld.reshape((-1,) + (1,) * (step.ndim - 1))
+            last = jnp.where(keep, step, last)
+            positions = positions + vld.astype(positions.dtype)
+            return (caches, positions, last), None
+
+        # time-major xs: (C, B, ...)
+        xs = jax.tree.map(
+            lambda t: t.swapaxes(0, 1), (tokens, valid, extras)
+        )
+        (caches, positions, last), _ = jax.lax.scan(
+            body, (caches, positions, last0), xs
+        )
+        return last, caches, positions
+
+    return (
+        jax.jit(decode_tick, donate_argnums=(3,)),
+        jax.jit(prefill_chunk, donate_argnums=(3,)),
+    )
