@@ -1,11 +1,17 @@
 # Tier-1 verification for every PR: `make ci` (or scripts/ci.sh) must be
 # green before merging.
-.PHONY: ci test bench-serve
+.PHONY: ci test bench-serve bench-smoke
 
-ci: test
+ci: test bench-smoke
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
 bench-serve:
 	PYTHONPATH=src python benchmarks/serve_throughput.py
+
+# reduced serving benchmark for CI: runs in interpret/CPU mode and asserts
+# O(1) dispatches/tick, engine==batcher parity, and paged-vs-dense parity
+# with >=4x slots at equal KV memory (block_size 8 and 16)
+bench-smoke:
+	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6

@@ -1,12 +1,18 @@
-"""Serving throughput benchmark: vectorized continuous-batching decode.
+"""Serving throughput benchmark: vectorized continuous-batching decode over
+dense and PAGED (block-table) KV caches.
 
 Measures tokens/sec and jitted dispatches-per-tick as a function of slot
-count, and ASSERTS the two properties the vectorized tick exists for:
+count, and ASSERTS the properties the serving stack exists for:
 
   * decode dispatch count is O(1) in ``num_slots`` (exactly one jitted
-    decode dispatch per tick no matter how many slots are live), and
+    decode dispatch per tick no matter how many slots are live),
   * the batcher's greedy output matches ``ServeEngine.generate``
-    token-for-token.
+    token-for-token, and
+  * the PAGED cache serves >= 4x the slots of the dense layout at equal
+    KV-cache memory, token-for-token identical to the dense engine, at
+    block_size 8 and 16 (the dense layout spends num_slots x max_seq
+    tokens of KV memory regardless of request length; the paged pool
+    spends what requests actually use).
 
 The interesting number on CPU is dispatches/tick and the slot-scaling of
 tokens/sec (per-dispatch overhead dominates small smoke models, which is
@@ -14,7 +20,7 @@ exactly the regime where the old one-slot-per-dispatch loop collapsed to
 1/num_slots of the throughput).
 
   PYTHONPATH=src python benchmarks/serve_throughput.py [--arch olmo_1b]
-      [--slots 1 2 4 8] [--prompt-len 8] [--max-new 16]
+      [--slots 1 2 4 8] [--prompt-len 8] [--max-new 16] [--skip-paged]
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.models import TransformerLM
-from repro.serve import ContinuousBatcher, Request, ServeEngine
+from repro.serve import ContinuousBatcher, PagingSpec, Request, ServeEngine
 
 
 def bench_slots(model, params, cfg, num_slots, prompt_len, max_new, max_seq):
@@ -78,12 +84,93 @@ def bench_slots(model, params, cfg, num_slots, prompt_len, max_new, max_seq):
     }
 
 
+def _cache_nbytes(tree):
+    return sum(
+        t.size * t.dtype.itemsize for t in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def bench_paged(model, cfg):
+    """Paged-vs-dense: >= 4x slots at equal KV memory, token parity.
+
+    Scenario: short requests (16 tokens) against a long-context cache
+    (max_seq 128). Dense spends 2 slots x 128 tokens of KV memory; the
+    paged pool of the SAME byte size (modulo the null block) serves 8
+    slots concurrently because slots only hold the blocks they reserved.
+    """
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq, prompt_len, max_new = 128, 8, 8
+    dense_slots, paged_slots = 2, 8
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (prompt_len,)).astype(np.int32)
+        for _ in range(paged_slots)
+    ]
+    # greedy references from the dense engine, one request at a time
+    engine = ServeEngine(model, params, max_seq=max_seq)
+    refs = [
+        engine.generate(
+            {
+                "tokens": jnp.asarray(p)[None],
+                "task_ids": jnp.full((1,), i % cfg.num_tasks, jnp.int32),
+            },
+            num_tokens=max_new,
+        )[0].tolist()
+        for i, p in enumerate(prompts)
+    ]
+    dense_bytes = _cache_nbytes(model.init_cache(dense_slots, max_seq))
+
+    print(f"\npaged KV cache: dense {dense_slots} slots x {max_seq} seq "
+          f"({dense_bytes / 1e3:.0f} kB KV) vs paged pool of equal size")
+    for block_size in (8, 16):
+        spec = PagingSpec.sized(
+            block_size, max_seq, pool_tokens=dense_slots * max_seq
+        )
+        paged_bytes = _cache_nbytes(
+            model.init_cache(paged_slots, max_seq, spec)
+        )
+        # equal KV memory: the paged pool may exceed dense only by the
+        # reserved null block
+        assert paged_bytes * (spec.num_blocks - 1) <= dense_bytes * spec.num_blocks, (
+            block_size, paged_bytes, dense_bytes,
+        )
+        assert paged_slots >= 4 * dense_slots
+        batcher = ContinuousBatcher(
+            model, params, num_slots=paged_slots, max_seq=max_seq,
+            paging=spec,
+        )
+        for i, p in enumerate(prompts):
+            batcher.submit(Request(uid=i, tokens=p, max_new=max_new,
+                                   task_id=i % cfg.num_tasks))
+        t0 = time.perf_counter()
+        done = batcher.run()
+        dt = time.perf_counter() - t0
+        assert len(done) == paged_slots
+        assert batcher.decode_dispatches == batcher.ticks  # one per tick
+        outs = {r.uid: r.out for r in done}
+        for i, ref in enumerate(refs):
+            assert outs[i] == ref, (block_size, i, outs[i], ref)
+        assert not any(r.truncated for r in done)
+        assert batcher.allocator.free_blocks == spec.num_blocks - 1
+        tok = sum(len(r.out) for r in done)
+        print(f"  block_size={block_size:>2}: {paged_slots} slots "
+              f"({paged_slots // dense_slots}x dense) on "
+              f"{paged_bytes / 1e3:.0f} kB KV, {tok} tokens in {dt:.1f}s "
+              f"({tok / dt:.1f} tok/s), {batcher.decode_dispatches} decode "
+              f"dispatches / {batcher.ticks} ticks, parity OK")
+    print(f"OK: paged cache serves {paged_slots // dense_slots}x the slots "
+          f"at equal KV memory, token-for-token with the dense engine "
+          f"(block_size 8 and 16)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--slots", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--skip-paged", action="store_true",
+                    help="skip the paged-vs-dense memory/parity section")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)
@@ -141,6 +228,10 @@ def main():
     print(f"throughput scaling {rows[0]['num_slots']}->"
           f"{rows[-1]['num_slots']} slots: {scale:.2f}x "
           f"(per-slot tok/s: {', '.join(f'{p:.1f}' for p in per_slot)})")
+
+    # ---- property 3: paged cache = more slots at equal KV memory ----
+    if not args.skip_paged:
+        bench_paged(model, cfg)
 
 
 if __name__ == "__main__":

@@ -3,3 +3,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# serving benchmark smoke: O(1)-dispatch, engine==batcher parity, and
+# paged-cache parity/memory assertions run on every PR (interpret/CPU
+# mode). The flag set lives in ONE place — the Makefile target.
+make bench-smoke

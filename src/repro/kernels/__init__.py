@@ -2,4 +2,6 @@ from repro.kernels.graph_mix import graph_mix, graph_mix_reference
 from repro.kernels.decode_attention import (
     decode_attention,
     decode_attention_reference,
+    paged_decode_attention,
+    paged_decode_attention_reference,
 )

@@ -1,2 +1,8 @@
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    paged_decode_attention,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_reference,
+    paged_decode_attention_reference,
+)

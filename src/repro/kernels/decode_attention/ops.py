@@ -1,10 +1,14 @@
-"""Public op: decode_attention — accepts model-layout tensors
-(q (B, 1, H, hd), caches (B, S, KVH, hd), pos () or (B,) per-slot) and
-dispatches to the Pallas kernel (compiled on TPU, interpret mode elsewhere —
-see repro.kernels.runtime)."""
+"""Public ops: decode_attention / paged_decode_attention — accept
+model-layout tensors (q (B, 1, H, hd); dense caches (B, S, KVH, hd) or a
+shared (num_blocks, block_size, KVH, hd) pool + (B, max_blocks) block table;
+pos () or (B,) per-slot) and dispatch to the Pallas kernels (compiled on
+TPU, interpret mode elsewhere — see repro.kernels.runtime)."""
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 
 
 def decode_attention(
@@ -21,5 +25,23 @@ def decode_attention(
     qg = q.reshape(b, kvh, h // kvh, hd)
     out = decode_attention_pallas(
         qg, k_cache, v_cache, pos, block_s=block_s, window=window
+    )
+    return out.reshape(b, 1, h, hd)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pool: jax.Array,  # (num_blocks, block_size, KVH, hd) shared pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks) physical page ids (0 = null)
+    pos: jax.Array,  # () shared or (B,) per-slot decode positions
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    b, one, h, hd = q.shape
+    kvh = k_pool.shape[2]
+    qg = q.reshape(b, kvh, h // kvh, hd)
+    out = paged_decode_attention_pallas(
+        qg, k_pool, v_pool, block_tables, pos, window=window
     )
     return out.reshape(b, 1, h, hd)

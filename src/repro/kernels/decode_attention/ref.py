@@ -27,3 +27,25 @@ def decode_attention_reference(
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_decode_attention_reference(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k_pool: jax.Array,  # (num_blocks, block_size, KVH, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks)
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather each slot's logical KV view from
+    the shared pool, then run the dense reference (masking by ``pos`` hides
+    null-block garbage exactly as in the serving path)."""
+
+    def view(pool):
+        g = pool[block_tables]  # (B, MB, bs, KVH, hd)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+    return decode_attention_reference(
+        q, view(k_pool), view(v_pool), pos, window=window
+    )

@@ -8,6 +8,14 @@ checked against ``decode_attend`` here.
 
 Shapes: x (B, S, d); q (B, S, H, hd); kv (B, S, KVH, hd); caches are
 (B, max_seq, KVH, hd) ring-less buffers written at ``pos``.
+
+Paged serving (repro.serve.paging) replaces the per-slot stripe with a
+shared (num_blocks, block_size, ...) pool + per-slot block tables;
+``paged_cache_write`` / ``gather_pages`` below are the only two primitives —
+the gathered (B, max_blocks * block_size, ...) view feeds the SAME masked
+``decode_attend`` / ``mla_decode`` math as the dense path (positions beyond
+``pos`` are masked, so unmapped/stale pages are unreachable), which is what
+makes dense-vs-paged token parity hold by construction.
 """
 from __future__ import annotations
 
@@ -148,6 +156,45 @@ def decode_attend(
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(q.dtype), v_cache)
     return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
+
+
+# --------------------------------------------------------- paged KV cache
+def paged_cache_write(
+    pool: Array,
+    new: Array,
+    pos: Array,
+    block_tables: Array,
+    live: Array | None = None,
+) -> Array:
+    """Scatter one token per slot into the shared block pool.
+
+    pool: (num_blocks, block_size, ...); new: (B, 1, ...); pos: (B,) logical
+    positions; block_tables: (B, max_blocks) physical block ids. Dead slots
+    (``live == False``) are routed to the reserved null block 0, so the
+    write is unconditional — the allocator guarantees no live slot ever maps
+    block 0. Live slots own disjoint blocks, so the scatter has no
+    cross-slot collisions.
+    """
+    bs = pool.shape[1]
+    bidx = jnp.take_along_axis(
+        block_tables, (pos // bs)[:, None], axis=1
+    )[:, 0]
+    if live is not None:
+        bidx = jnp.where(live, bidx, 0)
+    return pool.at[bidx, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def gather_pages(pool: Array, block_tables: Array) -> Array:
+    """Materialize each slot's logical KV view from the shared pool.
+
+    pool: (num_blocks, block_size, ...); block_tables: (B, max_blocks).
+    Returns (B, max_blocks * block_size, ...) — logical position p of slot b
+    is row p of the view, so downstream masking by ``pos`` is unchanged from
+    the dense layout. Unmapped table entries (0) surface null-block garbage
+    only at positions > pos, which the mask removes.
+    """
+    g = pool[block_tables]  # (B, MB, bs, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
 
 
 # ----------------------------------------------------------------- MLA

@@ -344,22 +344,31 @@ class TransformerLM:
         return loss, {"nll": jnp.mean(nll), "aux": aux}
 
     # ------------------------------------------------------------- serving
-    def _empty_attn_cache(self, b, max_seq):
+    _ATTN_KINDS = ("attn", "attn_moe", "shared_attn")
+
+    def _empty_attn_cache(self, b, max_seq, paging=None):
+        """Dense: per-slot (B, max_seq, ...) stripes. Paged: ONE shared
+        (num_blocks, block_size, ...) pool (slots address it through block
+        tables — see repro.serve.paging for the layout invariants)."""
         c = self.cfg
+        if paging is not None:
+            lead = (paging.num_blocks, paging.block_size)
+        else:
+            lead = (b, max_seq)
         if c.use_mla:
             return (
-                jnp.zeros((b, max_seq, c.kv_lora), self.dtype),
-                jnp.zeros((b, max_seq, c.qk_rope), self.dtype),
+                jnp.zeros(lead + (c.kv_lora,), self.dtype),
+                jnp.zeros(lead + (c.qk_rope,), self.dtype),
             )
         return (
-            jnp.zeros((b, max_seq, c.num_kv_heads, c.head_dim), self.dtype),
-            jnp.zeros((b, max_seq, c.num_kv_heads, c.head_dim), self.dtype),
+            jnp.zeros(lead + (c.num_kv_heads, c.head_dim), self.dtype),
+            jnp.zeros(lead + (c.num_kv_heads, c.head_dim), self.dtype),
         )
 
-    def _empty_block_cache(self, kind, b, max_seq):
+    def _empty_block_cache(self, kind, b, max_seq, paging=None):
         c = self.cfg
-        if kind in ("attn", "attn_moe", "shared_attn"):
-            return self._empty_attn_cache(b, max_seq)
+        if kind in self._ATTN_KINDS:
+            return self._empty_attn_cache(b, max_seq, paging)
         if kind == "mamba":
             d_inner, nh, conv_dim = mamba_lib.dims(
                 c.d_model, c.ssm_state, c.ssm_head_dim
@@ -378,19 +387,57 @@ class TransformerLM:
             )
         raise ValueError(kind)
 
-    def init_cache(self, batch_size: int, max_seq: int) -> list:
-        """Cache pytree: list (stage) of {slot: stacked entries (P, ...)}."""
+    def init_cache(self, batch_size: int, max_seq: int, paging=None) -> list:
+        """Cache pytree: list (stage) of {slot: stacked entries (P, ...)}.
+
+        paging: optional ``repro.serve.paging.PagingSpec`` — attention
+        entries become shared (P, num_blocks, block_size, ...) pools
+        (addressed via block tables in ``decode_step``); recurrent SSM /
+        xLSTM states are O(1) per slot and stay dense (P, B, ...)."""
         caches = []
         for si, pat in enumerate(self._stage_patterns()):
             reps = self.cfg.num_periods if si == 0 and self.cfg.num_periods > 0 else 1
             stage = {}
             for j, kind in enumerate(pat):
-                one = self._empty_block_cache(kind, batch_size, max_seq)
+                one = self._empty_block_cache(kind, batch_size, max_seq, paging)
                 stage[f"slot{j}"] = jax.tree.map(
                     lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape), one
                 )
             caches.append(stage)
         return caches
+
+    def reset_slot_state(self, caches, reset, max_seq: int, paging=None):
+        """Restore (re)admitted slots' PER-SLOT cache entries to the pristine
+        init value (recurrent states are cumulative and must be cleared on
+        slot reuse; the init values are not all zeros — mLSTM stabilizer m0
+        is -1e30 — so reference entries are traced in as constants).
+
+        Paged attention pools need NO clearing: the new request rewrites
+        every position it can read (prefill writes 0..S0-1, decode writes
+        each pos) and reads are masked by ``kv_idx <= pos``, so stale bytes
+        in recycled blocks are unreachable. reset: (B,) bool."""
+        b = reset.shape[0]
+        out = []
+        for si, pat in enumerate(self._stage_patterns()):
+            reps = self.cfg.num_periods if si == 0 and self.cfg.num_periods > 0 else 1
+            stage = {}
+            for j, kind in enumerate(pat):
+                entry = caches[si][f"slot{j}"]
+                if paging is not None and kind in self._ATTN_KINDS:
+                    stage[f"slot{j}"] = entry  # pooled: nothing per-slot
+                    continue
+                one = self._empty_block_cache(kind, b, max_seq)
+                empty = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape), one
+                )
+
+                def clear(c, e):
+                    m = reset.reshape((1, -1) + (1,) * (c.ndim - 2))
+                    return jnp.where(m, e, c)
+
+                stage[f"slot{j}"] = jax.tree.map(clear, entry, empty)
+            out.append(stage)
+        return out
 
     def prefill(self, params, batch, max_seq: int):
         """Run the full prompt, return (last_logits, caches padded to max_seq)."""
@@ -432,10 +479,24 @@ class TransformerLM:
         mask = mask.reshape(mask.shape + (1,) * (cache.ndim - 2))
         return jnp.where(mask, new.astype(cache.dtype), cache)
 
-    def _block_decode(self, kind, p, x, cache, pos, router_bias, live=None):
-        """pos: (B,) per-slot positions; live: optional (B,) slot mask."""
+    def _block_decode(
+        self, kind, p, x, cache, pos, router_bias, live=None,
+        block_tables=None,
+    ):
+        """pos: (B,) per-slot positions; live: optional (B,) slot mask;
+        block_tables: optional (B, max_blocks) — paged attention caches
+        (cache entries are shared pools, writes scatter through the table,
+        reads attend over the gathered per-slot view)."""
         c = self.cfg
-        if kind in ("attn", "attn_moe", "shared_attn"):
+        if kind in self._ATTN_KINDS:
+            if block_tables is None:
+                write = lambda cc, new: self._cache_write(cc, new, pos, live)
+                view = lambda cc: cc
+            else:
+                write = lambda cc, new: attn_lib.paged_cache_write(
+                    cc, new, pos, block_tables, live
+                )
+                view = lambda cc: attn_lib.gather_pages(cc, block_tables)
             h = apply_norm(c.norm_kind, x, p["norm1"] or None)
             if c.use_mla:
                 c_cache, r_cache = cache
@@ -445,11 +506,11 @@ class TransformerLM:
                     pos[:, None],
                     c.rope_theta,
                 )[:, :, 0, :]
-                c_cache = self._cache_write(c_cache, c_kv, pos, live)
-                r_cache = self._cache_write(r_cache, k_rope, pos, live)
+                c_cache = write(c_cache, c_kv)
+                r_cache = write(r_cache, k_rope)
                 out = attn_lib.mla_decode(
-                    p["attn"], h, self._mla_dims(), c_cache, r_cache, pos,
-                    c.rope_theta,
+                    p["attn"], h, self._mla_dims(), view(c_cache),
+                    view(r_cache), pos, c.rope_theta,
                 )
                 new_cache = (c_cache, r_cache)
             else:
@@ -460,10 +521,11 @@ class TransformerLM:
                 posv = pos[:, None]
                 q = attn_lib.apply_rope(q, posv, c.rope_theta)
                 k = attn_lib.apply_rope(k, posv, c.rope_theta)
-                k_cache = self._cache_write(k_cache, k, pos, live)
-                v_cache = self._cache_write(v_cache, v, pos, live)
+                k_cache = write(k_cache, k)
+                v_cache = write(v_cache, v)
                 o = attn_lib.decode_attend(
-                    q, k_cache, v_cache, pos, sliding_window=c.sliding_window
+                    q, view(k_cache), view(v_cache), pos,
+                    sliding_window=c.sliding_window,
                 )
                 b = o.shape[0]
                 out = matmul(
@@ -476,7 +538,7 @@ class TransformerLM:
                 ff, _ = apply_moe(
                     p["moe"], h, top_k=c.top_k, capacity_factor=c.capacity_factor,
                     router_bias=router_bias, groups=c.moe_groups,
-                    fsdp_gather=c.fsdp_gather_moe,
+                    fsdp_gather=c.fsdp_gather_moe, live=live,
                 )
             else:
                 ff = apply_mlp(p["mlp"], h, c.mlp_kind)
@@ -502,7 +564,8 @@ class TransformerLM:
             return x + out, state
         raise ValueError(kind)
 
-    def decode_step(self, params, batch, caches, pos, live=None):
+    def decode_step(self, params, batch, caches, pos, live=None,
+                    block_tables=None):
         """One-token decode. batch: {'tokens': (B,1[,K]) [, task_ids, vlm...]}.
 
         pos: () shared position or (B,) PER-SLOT positions — the vectorized
@@ -510,6 +573,9 @@ class TransformerLM:
         dispatch. live: optional (B,) bool; dead slots run through the math
         (their lane is padding) but their KV/recurrent state is left
         untouched, so a freed slot can be re-admitted later.
+        block_tables: optional (B, max_blocks) int32 — caches must then come
+        from ``init_cache(..., paging=spec)`` (shared attention pools;
+        recurrent states stay dense and ignore the table).
         Returns (logits (B,1,[K,]V), new caches)."""
         x = self._constrain(self._embed(params, batch))
         b = x.shape[0]
@@ -530,7 +596,8 @@ class TransformerLM:
                         else slot_params.get(f"slot{j}")
                     )
                     h, nc = self._block_decode(
-                        kind, p, h, slot_caches[f"slot{j}"], pos, rb, live
+                        kind, p, h, slot_caches[f"slot{j}"], pos, rb, live,
+                        block_tables,
                     )
                     out_caches[f"slot{j}"] = nc
                 return h, out_caches

@@ -56,13 +56,21 @@ def regather_expert_weights(params: dict) -> dict:
     return out
 
 
-def _moe_one_group(params, xf, bias, top_k: int, cap: int):
+def _moe_one_group(params, xf, bias, top_k: int, cap: int, live=None):
     """Dispatch + expert compute + combine for ONE token group.
 
     xf: (T', d). Returns (out (T', d), aux ()). The caller vmaps this over
     groups whose leading dim is sharded on the data axis, so the data-
     dependent scatter/gather stays SHARD-LOCAL — GSPMD never replicates the
     dispatch buffers (which it must do for a global scatter).
+
+    live: optional (T',) bool — tokens with ``live == False`` (dead/padding
+    decode slots) are EXCLUDED from dispatch: they are rerouted to a
+    sentinel expert id ``E`` that sorts past every real expert and is
+    dropped from the capacity counts, so they can neither occupy capacity
+    slots nor shift live tokens' intra-expert ranks. Without this, dead
+    slots steal capacity under tight ``capacity_factor`` and flip routing
+    of LIVE slots (outputs then depend on which unrelated slots are dead).
     """
     t, d = xf.shape
     e = params["router"].shape[1]
@@ -84,13 +92,18 @@ def _moe_one_group(params, xf, bias, top_k: int, cap: int):
     flat_expert = expert_idx.reshape(a)
     flat_gate = gate_vals.reshape(a)
     flat_token = jnp.repeat(jnp.arange(t), top_k)
+    if live is not None:
+        # dead tokens -> sentinel expert E: stable argsort puts them last,
+        # the (E,)-sized scatter drops them from counts, and keep below
+        # masks them out — live routing is independent of dead-slot content
+        flat_expert = jnp.where(jnp.repeat(live, top_k), flat_expert, e)
     order = jnp.argsort(flat_expert)  # stable
     se, sg, st_tok = flat_expert[order], flat_gate[order], flat_token[order]
-    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)  # OOB sentinel dropped
     starts = jnp.cumsum(counts) - counts  # (E,)
-    slot = jnp.arange(a) - starts[se]  # rank within expert
+    slot = jnp.arange(a) - starts[jnp.minimum(se, e - 1)]  # rank within expert
 
-    keep = slot < cap
+    keep = (slot < cap) & (se < e)
     dest = jnp.where(keep, se * cap + slot, e * cap)  # overflow -> scratch row
 
     buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[dest].set(xf[st_tok])
@@ -126,13 +139,17 @@ def apply_moe(
     router_bias: Array | None = None,
     groups: int = 1,
     fsdp_gather: bool = False,
+    live: Array | None = None,
 ) -> tuple[Array, Array]:
     """x: (B, S, d) -> (out (B, S, d), aux_loss ()).
 
     router_bias: optional (B, S, E) per-token logit bias (per-task
     personalized routing). ``groups``: number of dispatch groups — set to
     the data-axis size so each data shard dispatches locally (tokens are
-    batch-major, so group g == data shard g).
+    batch-major, so group g == data shard g). ``live``: optional (B,) or
+    (B, S) bool — dead rows (padding decode slots) are excluded from
+    routing/capacity so they cannot perturb live tokens' expert assignment
+    (their own output rows are zero).
     """
     b, s, d = x.shape
     e = params["router"].shape[1]
@@ -147,10 +164,14 @@ def apply_moe(
     bias = (
         router_bias.reshape(groups, tg, e) if router_bias is not None else None
     )
+    lv = None
+    if live is not None:
+        lv = live if live.ndim == 2 else jnp.broadcast_to(live[:, None], (b, s))
+        lv = lv.reshape(groups, tg)
     out, aux = jax.vmap(
-        lambda xx, bb: _moe_one_group(params, xx, bb, top_k, cap),
-        in_axes=(0, None if bias is None else 0),
-    )(xg, bias)
+        lambda xx, bb, ll: _moe_one_group(params, xx, bb, top_k, cap, ll),
+        in_axes=(0, None if bias is None else 0, None if lv is None else 0),
+    )(xg, bias, lv)
 
     out = out.reshape(b, s, d)
     if "shared" in params:

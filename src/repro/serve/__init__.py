@@ -1,3 +1,4 @@
 from repro.serve.engine import generate, ServeEngine
 from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.paging import BlockAllocator, PagingSpec
 from repro.serve.step import make_serve_step

@@ -1,12 +1,12 @@
 """Continuous batching for the serving path — vectorized per-slot-position
-decode.
+decode over dense OR paged (block-table) KV caches.
 
 A fixed pool of decode slots; requests join as slots free up and each slot
 tracks its own position. One jitted dispatch per tick advances EVERY live
 slot one token at its own position (``model.decode_step`` takes a (B,)
 position vector and a (B,) live mask): decode cost is O(1) dispatches in the
 slot count, the vLLM/TGI-style scheduling loop this system needs before
-paged caches and multi-host serving.
+multi-host serving.
 
 Design (shared with ``ServeEngine`` via ``repro.serve.step`` so the two
 serving paths cannot drift):
@@ -18,14 +18,25 @@ serving paths cannot drift):
     dispatch (ceil(max_prompt_len / C) dispatches per admission round, all
     newly admitted slots prefilled together), with per-token validity masks
     for heterogeneous prompt lengths.
-  * slot reuse — re-admission restores the slot's state to the pristine
-    ``init_cache`` value inside the prefill dispatch (recurrent SSM/xLSTM
-    states are cumulative and MUST be cleared; the mLSTM stabilizer resets
-    to -inf, not 0).
+  * slot reuse — re-admission restores the slot's per-slot state to the
+    pristine ``init_cache`` value inside the prefill dispatch (recurrent
+    SSM/xLSTM states are cumulative and MUST be cleared; the mLSTM
+    stabilizer resets to -inf, not 0).
   * multi-task — each request carries a ``task_id``; heterogeneous tasks
     share a tick and pick up their own personalization (the paper's
     graph-mixed per-task parameters) through the model's task embedding
     lookups.
+
+Paged mode (pass a ``repro.serve.paging.PagingSpec``): attention caches are
+a shared per-layer block pool instead of per-slot ``max_seq`` stripes, so
+KV memory scales with the POOL size, not ``num_slots x max_seq`` — the
+prerequisite for slot counts >> memory-per-slot. The batcher owns the
+host-side ``BlockAllocator``: admission reserves ``ceil((len(prompt) +
+max_new) / block_size)`` blocks for the whole request lifetime (a request
+that cannot get them WAITS in the queue — admission backpressure, no
+mid-flight OOM) and ``_finish_ready`` returns them to the free list. Block
+tables ride along with every jitted dispatch; freed blocks are recycled
+without clearing (see ``repro.serve.paging`` for the invariants).
 
 ``decode_dispatches`` / ``prefill_dispatches`` / ``ticks`` count real jitted
 calls so tests and ``benchmarks/serve_throughput.py`` can assert the O(1)
@@ -39,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
+from repro.serve.paging import BlockAllocator, PagingSpec
 from repro.serve.step import make_serve_step
 
 
@@ -50,6 +62,11 @@ class Request:
     task_id: int = 0
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # finished before emitting max_new tokens (slot capacity hit). submit()
+    # validates len(prompt) + max_new against capacity, so this stays False
+    # for every request admitted through the public API — it exists so a
+    # capacity-clipped finish can never again masquerade as a completed one.
+    truncated: bool = False
 
 
 class ContinuousBatcher:
@@ -62,13 +79,26 @@ class ContinuousBatcher:
         num_slots: int,
         max_seq: int,
         prefill_chunk: int = 16,
+        paging: PagingSpec | None = None,
     ):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
-        self.caches = model.init_cache(num_slots, max_seq)
+        self.paging = paging
+        if paging is not None:
+            # a slot's logical length is bounded by BOTH max_seq and its
+            # block-table capacity
+            self.slot_capacity = min(max_seq, paging.tokens_per_slot)
+            self.allocator = BlockAllocator(paging)
+            self.block_tables = np.zeros(
+                (num_slots, paging.max_blocks_per_slot), np.int32
+            )
+            self.slot_blocks: list[list[int]] = [[] for _ in range(num_slots)]
+        else:
+            self.slot_capacity = max_seq
+        self.caches = model.init_cache(num_slots, max_seq, paging)
         self.pos = np.zeros(num_slots, np.int32)  # next write position
         self.active: list[Request | None] = [None] * num_slots
         self.queue: list[Request] = []
@@ -76,16 +106,48 @@ class ContinuousBatcher:
         self.ticks = 0
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
-        self._tick_fn, self._prefill_fn = make_serve_step(model, max_seq)
+        self._tick_fn, self._prefill_fn = make_serve_step(
+            model, max_seq, paging
+        )
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: Request):
-        if len(req.tokens) >= self.max_seq:
+        """Validate a request BEFORE it can occupy a slot.
+
+        Rejects (a) empty prompts — prefill would emit no logits and the
+        first "generated" token would silently be argmax(0) == token 0 —
+        and (b) requests whose prompt + max_new budget cannot fit a slot,
+        which would otherwise finish early at the capacity guard with no
+        signal (silent truncation)."""
+        n = len(req.tokens)
+        if n == 0:
             raise ValueError(
-                f"prompt of {len(req.tokens)} tokens cannot fit a "
-                f"max_seq={self.max_seq} cache (needs room for >=1 "
-                "generated token)"
+                f"request {req.uid}: empty prompt — at least one prompt "
+                "token is required to produce the first logits"
             )
+        total = n + req.max_new
+        if total > self.slot_capacity:
+            detail = (
+                f"max_seq={self.max_seq}"
+                if self.paging is None
+                else f"min(max_seq={self.max_seq}, "
+                f"{self.paging.max_blocks_per_slot} blocks x "
+                f"{self.paging.block_size})"
+            )
+            raise ValueError(
+                f"request {req.uid}: prompt ({n}) + max_new ({req.max_new}) "
+                f"= {total} tokens exceeds the per-slot capacity "
+                f"{self.slot_capacity} ({detail}); it would be silently "
+                "truncated"
+            )
+        if self.paging is not None:
+            needed = self.paging.blocks_for(total)
+            if needed > self.paging.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.uid}: needs {needed} KV blocks but the "
+                    f"pool only has {self.paging.num_blocks - 1} allocatable "
+                    "blocks — it could never be admitted"
+                )
         self.queue.append(req)
 
     def _task_ids(self) -> np.ndarray:
@@ -93,22 +155,51 @@ class ContinuousBatcher:
             [r.task_id if r else 0 for r in self.active], np.int32
         )
 
+    def _block_tables(self):
+        return (
+            jnp.asarray(self.block_tables) if self.paging is not None else None
+        )
+
+    def _free_slot_blocks(self, s: int):
+        if self.paging is not None and self.slot_blocks[s]:
+            self.allocator.free(self.slot_blocks[s])
+            self.slot_blocks[s] = []
+            self.block_tables[s, :] = 0
+
     def _finish_ready(self):
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+            if len(req.out) >= req.max_new or self.pos[s] >= self.slot_capacity - 1:
                 req.done = True
+                # finished at the capacity guard, not by request completion
+                req.truncated = len(req.out) < req.max_new
                 self.finished.append(req)
                 self.active[s] = None  # state cleared on re-admission
+                self._free_slot_blocks(s)
 
     def _admit(self):
         """Fill free slots from the queue, then prefill ALL newly admitted
         prompts together in chunked dispatches (whole (num_slots, C) slices
-        per dispatch, per-token validity for unequal prompt lengths)."""
+        per dispatch, per-token validity for unequal prompt lengths).
+
+        Paged mode reserves each request's blocks here, for its whole
+        lifetime; when the free list cannot cover the queue head, admission
+        stops (FIFO backpressure) until finishing requests release blocks."""
         newly = []
         for s in range(self.num_slots):
             if self.active[s] is None and self.queue:
+                if self.paging is not None:
+                    head = self.queue[0]
+                    needed = self.paging.blocks_for(
+                        len(head.tokens) + head.max_new
+                    )
+                    if not self.allocator.can_alloc(needed):
+                        break  # backpressure: wait for finishes to free blocks
+                    blocks = self.allocator.alloc(needed)
+                    self.slot_blocks[s] = blocks
+                    self.block_tables[s, :] = 0
+                    self.block_tables[s, : len(blocks)] = blocks
                 self.active[s] = self.queue.pop(0)
                 self.pos[s] = 0
                 newly.append(s)
@@ -130,7 +221,7 @@ class ContinuousBatcher:
             last, self.caches, positions = self._prefill_fn(
                 self.params, jnp.asarray(tokens), task_ids, self.caches,
                 jnp.asarray(self.pos), jnp.asarray(valid),
-                jnp.asarray(reset), {},
+                jnp.asarray(reset), {}, self._block_tables(),
             )
             self.prefill_dispatches += 1
             self.pos = np.asarray(positions)
@@ -141,6 +232,8 @@ class ContinuousBatcher:
                     first_logits[s] = last_np[s]
         # the logits after each prompt's LAST token are the first generated
         # token — emit them (greedy), exactly like the engine's prefill.
+        # submit() rejects empty prompts, so every admitted slot has real
+        # last-token logits here.
         for s in newly:
             self.active[s].out.append(int(np.argmax(first_logits[s])))
 
@@ -157,6 +250,7 @@ class ContinuousBatcher:
         next_tok, _, self.caches = self._tick_fn(
             self.params, jnp.asarray(tokens), jnp.asarray(self._task_ids()),
             self.caches, jnp.asarray(self.pos), jnp.asarray(live),
+            self._block_tables(),
         )
         self.ticks += 1
         self.decode_dispatches += 1

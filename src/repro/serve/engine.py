@@ -7,6 +7,13 @@ whole batch, ceil(S0 / prefill_chunk) dispatches for the prompt — so greedy
 output is token-for-token identical between the two serving paths.
 ``generate`` is the convenience wrapper used by the examples and the serving
 benchmark.
+
+Pass ``paging`` (a ``repro.serve.paging.PagingSpec``) to serve from the
+paged block-pool cache layout: the engine's uniform batch maps to a trivial
+block-table assignment (request i owns ``blocks_for(S0 + num_tokens)``
+consecutive blocks), which makes it the dense-vs-paged parity oracle for the
+batcher's allocator-driven tables — the table CONTENTS differ, the gathered
+logical views do not.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
+from repro.serve.paging import PagingSpec
 from repro.serve.step import make_serve_step
 
 
@@ -33,18 +41,43 @@ class ServeEngine:
     params: Any
     max_seq: int
     prefill_chunk: int = 32
+    paging: PagingSpec | None = None
 
     def __post_init__(self):
-        self._tick, self._prefill = make_serve_step(self.model, self.max_seq)
+        self._tick, self._prefill = make_serve_step(
+            self.model, self.max_seq, self.paging
+        )
 
-    def _prefill_prompt(self, prompt_batch, task_ids):
+    def _assign_block_tables(self, b: int, total_tokens: int):
+        """Uniform-batch block tables: request i owns consecutive physical
+        blocks (ids start at 1 — block 0 is the reserved null block)."""
+        spec = self.paging
+        needed = spec.blocks_for(total_tokens)
+        if needed > spec.max_blocks_per_slot:
+            raise ValueError(
+                f"{total_tokens} tokens need {needed} blocks > "
+                f"max_blocks_per_slot={spec.max_blocks_per_slot}"
+            )
+        if 1 + b * needed > spec.num_blocks:
+            raise ValueError(
+                f"batch of {b} x {needed} blocks exceeds the pool "
+                f"({spec.num_blocks - 1} allocatable blocks)"
+            )
+        tables = np.zeros((b, spec.max_blocks_per_slot), np.int32)
+        for i in range(b):
+            tables[i, :needed] = np.arange(
+                1 + i * needed, 1 + (i + 1) * needed
+            )
+        return jnp.asarray(tables)
+
+    def _prefill_prompt(self, prompt_batch, task_ids, block_tables):
         """Chunked prefill: ceil(S0 / prefill_chunk) dispatches, each writing
         a whole (B, C) prompt slice. Returns (last-token logits, caches,
         positions)."""
         cfg = self.model.cfg
         toks = jnp.asarray(prompt_batch["tokens"])
         b, s0 = toks.shape[:2]
-        caches = self.model.init_cache(b, self.max_seq)
+        caches = self.model.init_cache(b, self.max_seq, self.paging)
         positions = jnp.zeros(b, jnp.int32)
         reset = jnp.ones(b, bool)  # fresh caches; reset is a no-op but keeps
         # the dispatch identical to the batcher's admission path
@@ -72,7 +105,7 @@ class ServeEngine:
                 }
             last, caches, positions = self._prefill(
                 self.params, chunk_toks, task_ids, caches, positions,
-                valid, reset, extras,
+                valid, reset, extras, block_tables,
             )
             reset = jnp.zeros(b, bool)
         return last, caches, positions
@@ -90,10 +123,15 @@ class ServeEngine:
             key = jax.random.PRNGKey(0)
         b, s0 = prompt_batch["tokens"].shape[:2]
         assert s0 + num_tokens <= self.max_seq
+        block_tables = None
+        if self.paging is not None:
+            block_tables = self._assign_block_tables(b, s0 + num_tokens)
         task_ids = jnp.asarray(
             prompt_batch.get("task_ids", jnp.zeros(b, jnp.int32))
         )
-        logits, caches, positions = self._prefill_prompt(prompt_batch, task_ids)
+        logits, caches, positions = self._prefill_prompt(
+            prompt_batch, task_ids, block_tables
+        )
         live = jnp.ones(b, bool)
         outs = []
         tok = _sample(logits, key, temperature)
@@ -102,7 +140,7 @@ class ServeEngine:
             key, sub = jax.random.split(key)
             greedy, logits, caches = self._tick(
                 self.params, tok.astype(jnp.int32), task_ids, caches,
-                positions, live,
+                positions, live, block_tables,
             )
             positions = positions + 1
             tok = greedy if temperature <= 0.0 else _sample(logits, sub, temperature)

@@ -1,0 +1,125 @@
+"""Paged KV-cache layout: block tables + a host-side block allocator.
+
+Instead of every decode slot owning a dense ``(max_seq, KVH, hd)`` KV stripe
+per layer (memory = ``num_slots x max_seq`` even when most slots hold short
+requests), attention caches are a SHARED pool of fixed-size pages per layer
+
+    k_pool, v_pool : (num_blocks, block_size, KVH, hd)      (GQA)
+    c_pool, r_pool : (num_blocks, block_size, r / qk_rope)  (MLA)
+
+plus ONE per-slot block table ``(num_slots, max_blocks_per_slot)`` of
+physical block ids, shared by every layer (all layers write the same
+positions). Logical position ``p`` of slot ``b`` lives at
+``pool[table[b, p // block_size], p % block_size]``.
+
+Invariants (everything downstream relies on these):
+
+  * block 0 is the NULL block — never handed out by the allocator. Dead
+    slots and masked-out prefill lanes write to it, so the jitted step never
+    needs a conditional; unmapped table entries are 0, and any garbage
+    behind them is unreachable because attention masks ``kv_idx <= pos``.
+  * allocation is per-REQUEST and happens on the host: the batcher reserves
+    ``ceil((len(prompt) + max_new) / block_size)`` blocks at admission and
+    frees them when the request finishes. A request that cannot get its
+    blocks stays in the queue (admission backpressure) — a mapped block is
+    therefore never shared by two live slots.
+  * freed blocks are recycled WITHOUT clearing: every position ``<= pos`` of
+    a live slot has been rewritten by that slot (prefill writes 0..S0-1,
+    decode writes each ``pos``), and positions ``> pos`` are masked off, so
+    stale bytes are never read.
+  * recurrent (mamba2 / xLSTM) states are O(1) per slot and stay dense —
+    paging only applies to the attention entries of the cache pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingSpec:
+    """Static shape of the paged cache (hashable: it keys the jitted step).
+
+    num_blocks counts PHYSICAL blocks including the reserved null block 0,
+    so ``num_blocks - 1`` blocks are allocatable. ``max_blocks_per_slot``
+    bounds one slot's logical length: a slot can hold at most
+    ``max_blocks_per_slot * block_size`` tokens.
+    """
+
+    block_size: int
+    num_blocks: int
+    max_blocks_per_slot: int
+
+    def __post_init__(self):
+        assert self.block_size > 0
+        assert self.num_blocks >= 2, "need >= 1 allocatable block + null"
+        assert self.max_blocks_per_slot > 0
+
+    @property
+    def tokens_per_slot(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+    @property
+    def pool_tokens(self) -> int:
+        """Token capacity of the shared pool (incl. the null block)."""
+        return self.num_blocks * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Physical blocks needed to hold ``n_tokens`` logical positions."""
+        return -(-n_tokens // self.block_size)
+
+    @staticmethod
+    def sized(
+        block_size: int, max_seq: int, pool_tokens: int
+    ) -> "PagingSpec":
+        """Spec whose pool holds ``pool_tokens`` KV entries (plus the null
+        block) and whose slots can each reach ``max_seq`` positions."""
+        return PagingSpec(
+            block_size=block_size,
+            num_blocks=pool_tokens // block_size + 1,
+            max_blocks_per_slot=-(-max_seq // block_size),
+        )
+
+
+class BlockAllocator:
+    """Host-side free list over physical blocks ``1..num_blocks-1``.
+
+    Pure bookkeeping — it never touches device memory. The batcher calls
+    ``alloc`` at admission and ``free`` at finish; ``can_alloc`` is the
+    admission-backpressure check.
+    """
+
+    def __init__(self, spec: PagingSpec):
+        self.spec = spec
+        # pop() hands out ascending ids first — deterministic tables for tests
+        self._free = list(range(spec.num_blocks - 1, 0, -1))
+        self.high_water = 0  # max blocks simultaneously allocated
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.spec.num_blocks - 1) - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"out of KV blocks: requested {n}, free {len(self._free)}"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        self.high_water = max(self.high_water, self.used_blocks)
+        return blocks
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            # fail fast on double-free / foreign ids: a block id reaching the
+            # free list twice would later be handed to TWO live slots, whose
+            # KV writes would silently corrupt each other
+            assert 0 < b < self.spec.num_blocks, f"foreign block id {b}"
+            assert b not in self._free, f"double free of block {b}"
+            self._free.append(b)
+        assert len(self._free) <= self.spec.num_blocks - 1

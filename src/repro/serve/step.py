@@ -5,24 +5,33 @@ Both serving front-ends (``ServeEngine`` for uniform batches and
 built here, so their numerics cannot drift — greedy decoding is
 token-for-token identical between them by construction.
 
-``make_serve_step(model, max_seq)`` returns two jitted callables:
+``make_serve_step(model, max_seq, paging=None)`` returns two jitted
+callables:
 
-  * ``decode_tick(params, tokens, task_ids, caches, positions, live)`` —
-    advance EVERY slot one token at its own position ``positions[b]`` in a
-    single dispatch. Dead slots (``live[b] == False``) run through the math
-    on a padding token but their KV/recurrent state is left untouched by the
-    model's masked cache writes. Returns (greedy next token, step logits,
-    new caches).
+  * ``decode_tick(params, tokens, task_ids, caches, positions, live,
+    block_tables)`` — advance EVERY slot one token at its own position
+    ``positions[b]`` in a single dispatch. Dead slots (``live[b] == False``)
+    run through the math on a padding token but their KV/recurrent state is
+    left untouched by the model's masked cache writes. Returns (greedy next
+    token, step logits, new caches).
 
   * ``prefill_chunk(params, tokens, task_ids, caches, positions, valid,
-    reset, extras)`` — write a whole (B, C) prompt slice in one dispatch via
-    an in-graph ``lax.scan`` of the same decode step (so prefill numerics ==
-    decode numerics exactly). ``valid[b, i]`` marks real prompt tokens
-    (slots admitted with shorter prompts, or slots not being prefilled at
-    all, are padding); ``reset[b]`` restores a slot's state to the pristine
-    ``init_cache`` value before writing (recurrent states are cumulative and
-    must be cleared on slot reuse). Returns (logits after each slot's last
-    valid token, new caches, advanced positions).
+    reset, extras, block_tables)`` — write a whole (B, C) prompt slice in
+    one dispatch via an in-graph ``lax.scan`` of the same decode step (so
+    prefill numerics == decode numerics exactly). ``valid[b, i]`` marks real
+    prompt tokens (slots admitted with shorter prompts, or slots not being
+    prefilled at all, are padding); ``reset[b]`` restores a slot's per-slot
+    state to the pristine ``init_cache`` value before writing (recurrent
+    states are cumulative and must be cleared on slot reuse). Returns
+    (logits after each slot's last valid token, new caches, advanced
+    positions).
+
+``paging`` (a ``repro.serve.paging.PagingSpec``) switches the attention
+caches to the shared block-pool layout: callers then pass the per-slot
+``block_tables`` (B, max_blocks) with every dispatch (dense callers pass
+``None`` — it is an empty pytree, so the jitted signature is shared).
+Paged pools are NOT cleared on reset (see ``TransformerLM.reset_slot_state``
+for why that is sound); only the dense recurrent entries are.
 
 Chunked prefill costs ceil(S0 / C) dispatches per admission round instead
 of S0; the decode path is exactly one dispatch per tick regardless of slot
@@ -63,37 +72,36 @@ def _logits_shape(cfg, b):
 
 
 @functools.lru_cache(maxsize=None)
-def make_serve_step(model: TransformerLM, max_seq: int):
+def make_serve_step(model: TransformerLM, max_seq: int, paging=None):
     """Build the (decode_tick, prefill_chunk) pair for one model/cache size.
 
-    Memoized on (model, max_seq) — both are frozen/hashable — so every
+    Memoized on (model, max_seq, paging) — all frozen/hashable — so every
     engine/batcher instance over the same model shares one compiled pair
     instead of re-jitting per instance."""
     cfg = model.cfg
 
-    def decode_tick(params, tokens, task_ids, caches, positions, live):
+    def decode_tick(params, tokens, task_ids, caches, positions, live,
+                    block_tables=None):
         batch = make_step_batch(cfg, tokens, task_ids)
         logits, new_caches = model.decode_step(
-            params, batch, caches, positions, live=live
+            params, batch, caches, positions, live=live,
+            block_tables=block_tables,
         )
         step_logits = logits[:, 0]  # (B, [K,] V)
         next_tok = jnp.argmax(step_logits, axis=-1)
         return next_tok, step_logits, new_caches
 
     def prefill_chunk(
-        params, tokens, task_ids, caches, positions, valid, reset, extras
+        params, tokens, task_ids, caches, positions, valid, reset, extras,
+        block_tables=None,
     ):
         b = tokens.shape[0]
-        # restore (re)admitted slots to the pristine init_cache state — the
-        # initial values are not all zeros (mLSTM stabilizer m0 = -1e30), so
-        # the reference states are traced in as constants, not zeros_like.
-        empty = model.init_cache(b, max_seq)
-
-        def clear(c, e):
-            m = reset.reshape((1, -1) + (1,) * (c.ndim - 2))
-            return jnp.where(m, e, c)
-
-        caches = jax.tree.map(clear, caches, empty)
+        # restore (re)admitted slots' per-slot state to the pristine
+        # init_cache value — the initial values are not all zeros (mLSTM
+        # stabilizer m0 = -1e30). Paged attention pools are shared across
+        # slots and need no clearing (reads are masked by pos and every
+        # readable position gets rewritten by the new request).
+        caches = model.reset_slot_state(caches, reset, max_seq, paging)
         last0 = jnp.zeros(_logits_shape(cfg, b), jnp.float32)
 
         def body(carry, inp):
@@ -101,7 +109,8 @@ def make_serve_step(model: TransformerLM, max_seq: int):
             tok, vld, ext = inp
             batch = make_step_batch(cfg, tok, task_ids, extras=ext)
             logits, caches = model.decode_step(
-                params, batch, caches, positions, live=vld
+                params, batch, caches, positions, live=vld,
+                block_tables=block_tables,
             )
             step = logits[:, 0]
             keep = vld.reshape((-1,) + (1,) * (step.ndim - 1))

@@ -200,6 +200,87 @@ def test_decode_step_live_mask_freezes_dead_slots():
 
 
 # ------------------------------------------------------ kernel vector pos
+def test_submit_rejects_empty_prompt():
+    """Zero-length prompts used to be admitted: prefill emitted no logits,
+    first_logits stayed the integer 0, and np.argmax(0) silently produced
+    token 0 as the 'first generated token'. submit() must reject them."""
+    cfg, model, params = _build("olmo_1b")
+    batcher = ContinuousBatcher(model, params, num_slots=1, max_seq=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        batcher.submit(Request(uid=0, tokens=np.zeros((0,), np.int32),
+                               max_new=4))
+
+
+def test_submit_rejects_silent_truncation():
+    """prompt + max_new > max_seq used to finish early at the pos guard with
+    no signal; submit() now validates the sum up front."""
+    cfg, model, params = _build("olmo_1b")
+    batcher = ContinuousBatcher(model, params, num_slots=1, max_seq=16)
+    with pytest.raises(ValueError, match="truncated"):
+        batcher.submit(Request(uid=0, tokens=np.arange(10, dtype=np.int32),
+                               max_new=10))
+    # boundary: exactly filling the cache is fine
+    batcher.submit(Request(uid=1, tokens=np.arange(10, dtype=np.int32),
+                           max_new=6))
+    (done,) = batcher.run()
+    assert len(done.out) == 6 and not done.truncated
+
+
+def test_truncated_flag_set_on_capacity_finish():
+    """Defense in depth: a request that somehow reaches the capacity guard
+    (here: smuggled past submit()) is flagged, not silently completed."""
+    cfg, model, params = _build("olmo_1b")
+    batcher = ContinuousBatcher(model, params, num_slots=1, max_seq=16)
+    rng = np.random.default_rng(0)
+    req = Request(uid=0,
+                  tokens=rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32),
+                  max_new=10)
+    batcher.queue.append(req)  # bypass submit validation on purpose
+    (done,) = batcher.run()
+    assert done.truncated
+    assert len(done.out) < done.max_new
+
+
+# --------------------------------------------------- MoE dead-slot isolation
+def test_moe_dead_slots_do_not_steal_capacity_or_flip_routing():
+    """Expert capacity is computed over the whole slot batch, so without the
+    live mask dead/padding slots consume capacity and evict LIVE tokens
+    under tight capacity_factor. With the mask, live routing is independent
+    of how many slots are dead and of what garbage they hold."""
+    from repro.models.moe import apply_moe, init_moe
+
+    d, d_ff, e = 8, 16, 2
+    params = init_moe(jax.random.PRNGKey(0), d, d_ff, e, 0, jnp.float32)
+    # route EVERY token to expert 0
+    params["router"] = jnp.stack(
+        [jnp.full((d,), 3.0), jnp.full((d,), -3.0)], axis=1
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 1, d)), jnp.float32)
+    kw = dict(top_k=1, capacity_factor=0.5)  # cap = 1 slot for 4 tokens
+    live = jnp.asarray([False, False, False, True])
+
+    out_unmasked, _ = apply_moe(params, x, **kw)
+    out_masked, _ = apply_moe(params, x, **kw, live=live)
+    # the bug: dead rows 0-2 claim expert 0's only capacity slot and the
+    # live row is dropped to zero output
+    assert bool(jnp.all(out_unmasked[3] == 0))
+    # the fix: dead rows are excluded from dispatch, live row is served
+    assert bool(jnp.any(out_masked[3] != 0))
+    assert bool(jnp.all(out_masked[:3] == 0))  # dead rows emit nothing
+
+    # live output is invariant to dead-slot CONTENT
+    x2 = x.at[0].set(100.0).at[1].set(-7.0)
+    out_masked2, _ = apply_moe(params, x2, **kw, live=live)
+    np.testing.assert_array_equal(
+        np.asarray(out_masked[3]), np.asarray(out_masked2[3])
+    )
+
+    # an all-live mask is bit-identical to the unmasked (training) path
+    out_all, _ = apply_moe(params, x, **kw, live=jnp.ones(4, bool))
+    np.testing.assert_array_equal(np.asarray(out_all), np.asarray(out_unmasked))
+
+
 def test_decode_attention_kernel_per_slot_positions():
     """Flash-decode Pallas kernel accepts (B,) positions and matches the
     serving attention per slot (no hypothesis dependency — runs everywhere)."""
