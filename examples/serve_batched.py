@@ -13,6 +13,11 @@
      the same 4 requests run on a quarter of the dense KV memory with
      identical greedy output.
 
+  4. Prefill modes: every prompt chunk above was computed by the
+     parallel-within-chunk ``model.prefill_step`` (one dispatch = C tokens
+     in parallel); ``prefill_mode="scan"`` replays the per-token oracle and
+     the outputs must match token-for-token.
+
 Plus a numerical cross-check of the flash-decode Pallas kernel (per-slot
 position vector) against the serving attention path.
 
@@ -93,6 +98,23 @@ print(f"paged batcher (block_size={spec.block_size}, "
       f"{spec.num_blocks - 1} blocks): outputs match dense engine: "
       f"{paged_match}; blocks free after run: "
       f"{paged.allocator.free_blocks}/{spec.num_blocks - 1}")
+
+# ---- prefill modes: parallel-within-chunk vs the per-token scan oracle ----
+t0 = time.perf_counter()
+oracle = ContinuousBatcher(model, params, num_slots=2, max_seq=96,
+                           prefill_mode="scan")
+for i in range(batch):
+    oracle.submit(Request(
+        uid=i, tokens=np.asarray(prompts["tokens"][i]), max_new=32,
+        task_id=int(prompts["task_ids"][i]),
+    ))
+done_scan = oracle.run()
+dt = time.perf_counter() - t0
+scan_match = all(
+    {r.uid: r.out for r in done_scan}[i] == by_uid[i] for i in range(batch)
+)
+print(f"per-token-scan prefill oracle in {dt:.1f}s: outputs match the "
+      f"parallel prefill path: {scan_match}")
 
 # ---- kernel cross-check: serving attention == Pallas flash-decode ----
 # per-slot decode positions, as the vectorized batcher issues them

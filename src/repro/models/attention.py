@@ -129,33 +129,37 @@ def decode_attend(
     *,
     sliding_window: int | None = None,
 ) -> Array:
-    """Single-token attention against a cache.
+    """Chunk-of-queries attention against a cache.
 
-    q: (B, 1, H, hd); caches: (B, max_seq, KVH, hd); pos: () shared index or
-    (B,) per-slot indices (the new token's position; cache already contains
-    it) — per-slot positions are how the continuous batcher advances slots at
-    different depths in one dispatch. Returns (B, 1, H, hd).
+    q: (B, C, H, hd) — C == 1 is the decode tick, C > 1 the parallel prefill
+    chunk; caches: (B, max_seq, KVH, hd); pos: () shared index or (B,)
+    per-slot indices of the FIRST query token (query i sits at ``pos + i``;
+    the cache already contains the whole chunk, written before this call).
+    Causality within the chunk falls out of the same kv-position mask that
+    hides unwritten cache rows: query i reads ``kv_idx <= pos + i`` only.
+    Returns (B, C, H, hd_v).
     """
-    b, _, h, hd = q.shape
+    b, c, h, hd = q.shape
     kvh = k_cache.shape[2]
     g = h // kvh
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
-    qg = q.reshape(b, kvh, g, hd)
+    qg = q.reshape(b, c, kvh, g, hd)
     # NOTE: operand-dtype dots on purpose — requesting an f32 dot against the
     # bf16 cache makes XLA-CPU hoist a full f32 convert of the scanned cache
     # stack out of the layer loop (2x cache memory); the TPU MXU takes bf16
     # operands natively with f32 accumulation. Softmax itself runs in f32.
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
-    scores = scores * scale  # (B, KVH, G, S)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    scores = scores * scale  # (B, KVH, G, C, S)
     kv_pos = jnp.arange(k_cache.shape[1])
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    mask = kv_pos[None, :] <= pos_b[:, None]  # (B, S)
+    q_pos = pos_b[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, C, S)
     if sliding_window is not None:
-        mask &= kv_pos[None, :] > pos_b[:, None] - sliding_window
-    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        mask &= kv_pos[None, None, :] > q_pos[:, :, None] - sliding_window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(q.dtype), v_cache)
-    return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(q.dtype), v_cache)
+    return out.astype(q.dtype).reshape(b, c, h, v_cache.shape[-1])
 
 
 # --------------------------------------------------------- paged KV cache
@@ -182,6 +186,32 @@ def paged_cache_write(
     if live is not None:
         bidx = jnp.where(live, bidx, 0)
     return pool.at[bidx, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def paged_cache_write_slab(
+    pool: Array,
+    new: Array,
+    pos: Array,
+    block_tables: Array,
+    valid: Array,
+) -> Array:
+    """Scatter a whole (B, C) prefill chunk into the shared block pool.
+
+    pool: (num_blocks, block_size, ...); new: (B, C, ...); pos: (B,) logical
+    position of each slot's FIRST chunk token (token i lands at ``pos + i``);
+    valid: (B, C) — invalid lanes (prompt shorter than the chunk, slots not
+    being prefilled) are routed to the reserved null block 0, exactly like
+    dead slots in ``paged_cache_write``. Live slots own disjoint blocks and
+    chunk tokens occupy distinct in-block offsets, so the scatter has no
+    cross-slot collisions; null-block collisions are unobservable.
+    """
+    bs = pool.shape[1]
+    c = new.shape[1]
+    tgt = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) logical positions
+    blk = jnp.clip(tgt // bs, 0, block_tables.shape[1] - 1)
+    bidx = jnp.take_along_axis(block_tables, blk, axis=1)  # (B, C)
+    bidx = jnp.where(valid, bidx, 0)
+    return pool.at[bidx, tgt % bs].set(new.astype(pool.dtype))
 
 
 def gather_pages(pool: Array, block_tables: Array) -> Array:
@@ -245,15 +275,18 @@ def mla_full(params, x, dims: MLADims, positions, theta, q_chunk=1024):
 def mla_decode(params, x, dims: MLADims, c_cache, krope_cache, pos, theta):
     """Absorbed-matrix MLA decode: score/value contractions happen in the
     compressed c_kv space, so the per-token cache is (kv_lora + qk_rope) —
-    the whole point of MLA. x: (B, 1, d); caches already contain this token;
-    pos: () shared or (B,) per-slot positions.
+    the whole point of MLA. x: (B, C, d) — C == 1 is the decode tick, C > 1
+    the parallel prefill chunk; caches already contain the whole chunk;
+    pos: () shared or (B,) per-slot positions of the FIRST query token
+    (query i sits at ``pos + i`` and reads ``kv_idx <= pos + i`` only).
     """
-    b, _, d = x.shape
+    b, c, d = x.shape
     h, dn, dr, dv, r = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_dim, dims.kv_lora
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    q = matmul(x, params["wq"]).reshape(b, 1, h, dn + dr)
+    q_pos = pos_b[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    q = matmul(x, params["wq"]).reshape(b, c, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = apply_rope(q_rope, pos_b[:, None], theta)
+    q_rope = apply_rope(q_rope, q_pos, theta)
     # absorb W_uk into the query: q' = q_nope @ W_uk^T per head -> r-dim
     w_uk = params["w_uk"].reshape(r, h, dn)
     q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
@@ -262,11 +295,13 @@ def mla_decode(params, x, dims: MLADims, c_cache, krope_cache, pos, theta):
         jnp.einsum("bqhr,bkr->bhqk", q_c, c_cache.astype(jnp.float32))
         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32))
     ) * scale
-    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos_b[:, None]  # (B, S)
-    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    mask = (
+        jnp.arange(c_cache.shape[1])[None, None, :] <= q_pos[:, :, None]
+    )  # (B, C, S)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    ctx = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))  # (B,1,H,r)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))  # (B,C,H,r)
     w_uv = params["w_uv"].reshape(r, h, dv)
     out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
-    out = matmul(out.reshape(b, 1, h * dv), params["wo"])
+    out = matmul(out.reshape(b, c, h * dv), params["wo"])
     return out

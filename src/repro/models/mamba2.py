@@ -53,9 +53,14 @@ def _split_proj(params, x, d_model, d_state, head_dim):
     return z, xbc, dt, d_inner, n_heads
 
 
-def _causal_conv(xbc: Array, conv_w: Array) -> Array:
-    """Depthwise causal conv over time. xbc: (B, S, C)."""
-    pad = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+def _causal_conv(xbc: Array, conv_w: Array, prefix: Array | None = None) -> Array:
+    """Depthwise causal conv over time. xbc: (B, S, C); prefix: optional
+    (B, K-1, C) window carried in from earlier tokens (zeros when absent —
+    the sequence starts here)."""
+    if prefix is None:
+        pad = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([prefix, xbc], axis=1)
     out = sum(
         pad[:, k : k + xbc.shape[1], :] * conv_w[k][None, None, :]
         for k in range(CONV_K)
@@ -63,22 +68,49 @@ def _causal_conv(xbc: Array, conv_w: Array) -> Array:
     return jax.nn.silu(out)
 
 
-def mamba2_full(params, x, *, d_state: int, head_dim: int, chunk: int = 256):
+def mamba2_full(
+    params, x, *, d_state: int, head_dim: int, chunk: int = 256,
+    state=None, valid: Array | None = None,
+):
     """Full-sequence chunked SSD. x: (B, S, d_model) -> (y, final_state).
 
     final_state: (conv_tail (B, K-1, conv_dim), ssm (B, nh, hd, ds)).
+
+    state: optional incoming (conv_tail, ssm) — the serving prefill threads a
+    slot's recurrent cache in so a chunk continues mid-sequence (None keeps
+    the training behaviour: zero conv window, zero SSM state). valid:
+    optional (B, S) bool marking real tokens; each row must be a contiguous
+    PREFIX (serving chunks are left-packed). Invalid tokens are exact
+    no-ops on the state — their dt is forced to 0, so they neither decay nor
+    feed the recurrence — and the returned conv_tail is the window ending at
+    each row's LAST VALID token, which is what decode resumes from.
     """
     bsz, s, d_model = x.shape
     z, xbc, dt, d_inner, nh = _split_proj(params, x, d_model, d_state, head_dim)
-    conv_tail = xbc[:, -(CONV_K - 1) :, :] if s >= CONV_K - 1 else jnp.pad(
-        xbc, ((0, 0), (CONV_K - 1 - s, 0), (0, 0))
+    conv_prefix = (
+        jnp.zeros((bsz, CONV_K - 1, xbc.shape[-1]), xbc.dtype)
+        if state is None
+        else state[0].astype(xbc.dtype)
     )
-    xbc = _causal_conv(xbc, params["conv_w"])
+    # raw (pre-conv) window, indexed by tokens consumed: after n valid
+    # tokens the carry-out tail is window[n : n + K-1]
+    window = jnp.concatenate([conv_prefix, xbc], axis=1)  # (B, K-1+S, conv)
+    if valid is None:
+        conv_tail = window[:, s : s + CONV_K - 1, :]
+    else:
+        n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        idx = n_valid[:, None] + jnp.arange(CONV_K - 1)[None, :]
+        conv_tail = jnp.take_along_axis(window, idx[:, :, None], axis=1)
+    xbc = _causal_conv(xbc, params["conv_w"], prefix=conv_prefix)
     xs = xbc[..., :d_inner].reshape(bsz, s, nh, head_dim)
     b_in = xbc[..., d_inner : d_inner + d_state]  # (B, S, ds)
     c_in = xbc[..., d_inner + d_state :]  # (B, S, ds)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    if valid is not None:
+        # dt == 0 makes a token a no-op on the SSD recurrence: zero decay
+        # (da == 0) and zero input contribution (dt scales B x)
+        dt = jnp.where(valid[:, :, None], dt, 0.0)
     a = -jnp.exp(params["a_log"])  # (nh,)
     da = dt * a[None, None, :]  # log-decay per step, (B, S, nh)
 
@@ -112,7 +144,11 @@ def mamba2_full(params, x, *, d_state: int, head_dim: int, chunk: int = 256):
         s_new = s_prev * jnp.exp(cum[:, -1, :])[:, :, None, None] + st
         return s_new, y_intra + y_inter
 
-    s0 = jnp.zeros((bsz, nh, head_dim, d_state), jnp.float32)
+    s0 = (
+        jnp.zeros((bsz, nh, head_dim, d_state), jnp.float32)
+        if state is None
+        else state[1].astype(jnp.float32)
+    )
     s_final, y_chunks = jax.lax.scan(
         process_chunk, s0, (xs_c, b_c, c_c, dt_c, da_c)
     )

@@ -5,10 +5,12 @@ over pattern periods (stacked params, O(1) HLO size in depth) plus an
 unstacked remainder stage. "shared_attn" blocks (Zamba2) reuse a single
 weight set across all periods via closure capture.
 
-Three entry points, all pure functions of (params, inputs):
+Four entry points, all pure functions of (params, inputs):
   * ``forward``      — full-sequence logits (training / evaluation).
   * ``prefill``      — full-sequence + populated caches, last-token logits.
   * ``decode_step``  — one token against caches at ``pos``.
+  * ``prefill_step`` — a (B, C) prompt chunk against caches at per-slot
+    offsets, all C tokens computed in parallel (serving prefill).
 
 Multi-task personalization (the paper's technique) lives in ``params['task']``:
 per-task final-norm gain, lm-head bias and (MoE) router bias, all with a
@@ -479,6 +481,84 @@ class TransformerLM:
         mask = mask.reshape(mask.shape + (1,) * (cache.ndim - 2))
         return jnp.where(mask, new.astype(cache.dtype), cache)
 
+    @staticmethod
+    def _cache_write_slab(cache, new, pos, valid):
+        """Masked (B, C)-slab cache write at per-slot offsets — the chunk
+        counterpart of ``_cache_write`` (same masked-select idiom, so
+        sequence-sharded caches still write shard-locally). cache: (B, S,
+        ...), new: (B, C, ...), pos: (B,) first-token positions (chunk token
+        i lands at ``pos + i``), valid: (B, C) — invalid lanes write
+        nothing."""
+        s = cache.shape[1]
+        c = new.shape[1]
+        tgt = jnp.where(
+            valid, pos[:, None] + jnp.arange(c)[None, :], -1
+        )  # (B, C); -1 never matches a cache row
+        onehot = jnp.arange(s)[None, :, None] == tgt[:, None, :]  # (B, S, C)
+        hit = jnp.any(onehot, axis=2)  # (B, S)
+        src = jnp.argmax(onehot, axis=2)  # (B, S) chunk index per cache row
+        idx = src.reshape(src.shape + (1,) * (new.ndim - 2))
+        val = jnp.take_along_axis(new, idx, axis=1)  # (B, S, ...)
+        mask = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
+        return jnp.where(mask, val.astype(cache.dtype), cache)
+
+    def _attn_block(
+        self, kind, p, x, cache, pos, router_bias, moe_live, write, view,
+    ):
+        """Attention block body shared by decode (C == 1) and parallel
+        prefill (C > 1): project the chunk, write its KV slab through
+        ``write``, attend over the ``view`` of the cache with per-query
+        positions ``pos + i``, then MLP/MoE. x: (B, C, d); pos: (B,)
+        first-token positions; moe_live: (B,) live or (B, C) valid mask —
+        ``apply_moe`` accepts either."""
+        c = self.cfg
+        b, cl = x.shape[:2]
+        q_pos = pos[:, None] + jnp.arange(cl)[None, :]  # (B, C)
+        h = apply_norm(c.norm_kind, x, p["norm1"] or None)
+        if c.use_mla:
+            c_cache, r_cache = cache
+            c_kv = matmul(h, p["attn"]["w_dkv"])  # (B, C, r)
+            k_rope = attn_lib.apply_rope(
+                matmul(h, p["attn"]["w_krope"])[:, :, None, :],
+                q_pos,
+                c.rope_theta,
+            )[:, :, 0, :]
+            c_cache = write(c_cache, c_kv)
+            r_cache = write(r_cache, k_rope)
+            out = attn_lib.mla_decode(
+                p["attn"], h, self._mla_dims(), view(c_cache),
+                view(r_cache), pos, c.rope_theta,
+            )
+            new_cache = (c_cache, r_cache)
+        else:
+            k_cache, v_cache = cache
+            q, k, v = attn_lib.gqa_project(
+                p["attn"], h, c.num_heads, c.num_kv_heads, c.head_dim
+            )
+            q = attn_lib.apply_rope(q, q_pos, c.rope_theta)
+            k = attn_lib.apply_rope(k, q_pos, c.rope_theta)
+            k_cache = write(k_cache, k)
+            v_cache = write(v_cache, v)
+            o = attn_lib.decode_attend(
+                q, view(k_cache), view(v_cache), pos,
+                sliding_window=c.sliding_window,
+            )
+            out = matmul(
+                o.reshape(b, cl, c.num_heads * c.head_dim), p["attn"]["wo"]
+            )
+            new_cache = (k_cache, v_cache)
+        x = x + out
+        h = apply_norm(c.norm_kind, x, p["norm2"] or None)
+        if kind == "attn_moe":
+            ff, _ = apply_moe(
+                p["moe"], h, top_k=c.top_k, capacity_factor=c.capacity_factor,
+                router_bias=router_bias, groups=c.moe_groups,
+                fsdp_gather=c.fsdp_gather_moe, live=moe_live,
+            )
+        else:
+            ff = apply_mlp(p["mlp"], h, c.mlp_kind)
+        return x + ff, new_cache
+
     def _block_decode(
         self, kind, p, x, cache, pos, router_bias, live=None,
         block_tables=None,
@@ -497,52 +577,9 @@ class TransformerLM:
                     cc, new, pos, block_tables, live
                 )
                 view = lambda cc: attn_lib.gather_pages(cc, block_tables)
-            h = apply_norm(c.norm_kind, x, p["norm1"] or None)
-            if c.use_mla:
-                c_cache, r_cache = cache
-                c_kv = matmul(h, p["attn"]["w_dkv"])  # (B, 1, r)
-                k_rope = attn_lib.apply_rope(
-                    matmul(h, p["attn"]["w_krope"])[:, :, None, :],
-                    pos[:, None],
-                    c.rope_theta,
-                )[:, :, 0, :]
-                c_cache = write(c_cache, c_kv)
-                r_cache = write(r_cache, k_rope)
-                out = attn_lib.mla_decode(
-                    p["attn"], h, self._mla_dims(), view(c_cache),
-                    view(r_cache), pos, c.rope_theta,
-                )
-                new_cache = (c_cache, r_cache)
-            else:
-                k_cache, v_cache = cache
-                q, k, v = attn_lib.gqa_project(
-                    p["attn"], h, c.num_heads, c.num_kv_heads, c.head_dim
-                )
-                posv = pos[:, None]
-                q = attn_lib.apply_rope(q, posv, c.rope_theta)
-                k = attn_lib.apply_rope(k, posv, c.rope_theta)
-                k_cache = write(k_cache, k)
-                v_cache = write(v_cache, v)
-                o = attn_lib.decode_attend(
-                    q, view(k_cache), view(v_cache), pos,
-                    sliding_window=c.sliding_window,
-                )
-                b = o.shape[0]
-                out = matmul(
-                    o.reshape(b, 1, c.num_heads * c.head_dim), p["attn"]["wo"]
-                )
-                new_cache = (k_cache, v_cache)
-            x = x + out
-            h = apply_norm(c.norm_kind, x, p["norm2"] or None)
-            if kind == "attn_moe":
-                ff, _ = apply_moe(
-                    p["moe"], h, top_k=c.top_k, capacity_factor=c.capacity_factor,
-                    router_bias=router_bias, groups=c.moe_groups,
-                    fsdp_gather=c.fsdp_gather_moe, live=live,
-                )
-            else:
-                ff = apply_mlp(p["mlp"], h, c.mlp_kind)
-            return x + ff, new_cache
+            return self._attn_block(
+                kind, p, x, cache, pos, router_bias, live, write, view
+            )
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
             out, state = mamba_lib.mamba2_step(
@@ -564,6 +601,42 @@ class TransformerLM:
             return x + out, state
         raise ValueError(kind)
 
+    def _run_cached_stages(self, params, x, caches, block_fn):
+        """Stage loop shared by ``decode_step`` and ``prefill_step``: scan
+        (or unroll) the period-stacked params + cache entries, calling
+        ``block_fn(kind, p, h, cache)`` per block. Returns (x, new_caches).
+        """
+        new_caches = []
+        for si, pat in enumerate(self._stage_patterns()):
+            slots = params["stages"][si]
+
+            def body(carry, xs, pat=pat):
+                h = carry
+                slot_params, slot_caches = xs
+                out_caches = {}
+                for j, kind in enumerate(pat):
+                    p = (
+                        params["shared_attn"]
+                        if kind == "shared_attn"
+                        else slot_params.get(f"slot{j}")
+                    )
+                    h, nc = block_fn(kind, p, h, slot_caches[f"slot{j}"])
+                    out_caches[f"slot{j}"] = nc
+                return h, out_caches
+
+            if self.cfg.unroll:
+                reps = jax.tree_util.tree_leaves(caches[si])[0].shape[0]
+                outs = []
+                for i in range(reps):
+                    xs_i = jax.tree.map(lambda t: t[i], (slots, caches[si]))
+                    x, co = body(x, xs_i)
+                    outs.append(co)
+                stage_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+            else:
+                x, stage_cache = jax.lax.scan(body, x, (slots, caches[si]))
+            new_caches.append(stage_cache)
+        return x, new_caches
+
     def decode_step(self, params, batch, caches, pos, live=None,
                     block_tables=None):
         """One-token decode. batch: {'tokens': (B,1[,K]) [, task_ids, vlm...]}.
@@ -581,37 +654,100 @@ class TransformerLM:
         b = x.shape[0]
         pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
         rb = self._router_bias(params, batch, 1)
-        new_caches = []
-        for si, pat in enumerate(self._stage_patterns()):
-            slots = params["stages"][si]
-
-            def body(carry, xs, pat=pat):
-                h = carry
-                slot_params, slot_caches = xs
-                out_caches = {}
-                for j, kind in enumerate(pat):
-                    p = (
-                        params["shared_attn"]
-                        if kind == "shared_attn"
-                        else slot_params.get(f"slot{j}")
-                    )
-                    h, nc = self._block_decode(
-                        kind, p, h, slot_caches[f"slot{j}"], pos, rb, live,
-                        block_tables,
-                    )
-                    out_caches[f"slot{j}"] = nc
-                return h, out_caches
-
-            if self.cfg.unroll:
-                reps = jax.tree_util.tree_leaves(caches[si])[0].shape[0]
-                outs = []
-                for i in range(reps):
-                    xs_i = jax.tree.map(lambda t: t[i], (slots, caches[si]))
-                    x, co = body(x, xs_i)
-                    outs.append(co)
-                stage_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
-            else:
-                x, stage_cache = jax.lax.scan(body, x, (slots, caches[si]))
-            new_caches.append(stage_cache)
+        x, new_caches = self._run_cached_stages(
+            params, x, caches,
+            lambda kind, p, h, cache: self._block_decode(
+                kind, p, h, cache, pos, rb, live, block_tables
+            ),
+        )
         logits = self._logits(params, x, batch)
+        return logits, new_caches
+
+    def _block_prefill(
+        self, kind, p, x, cache, pos, valid, router_bias, block_tables=None,
+    ):
+        """(B, C)-chunk counterpart of ``_block_decode``: all C tokens of the
+        chunk are computed in parallel against the cache. pos: (B,) per-slot
+        position of the chunk's FIRST token; valid: (B, C) real-token mask —
+        rows must be contiguous prefixes (serving chunks are left-packed).
+        Slots with an all-False row (mid-decode, not being prefilled) keep
+        their KV rows and recurrent state exactly untouched."""
+        c = self.cfg
+        if kind in self._ATTN_KINDS:
+            if block_tables is None:
+                write = lambda cc, new: self._cache_write_slab(
+                    cc, new, pos, valid
+                )
+                view = lambda cc: cc
+            else:
+                write = lambda cc, new: attn_lib.paged_cache_write_slab(
+                    cc, new, pos, block_tables, valid
+                )
+                view = lambda cc: attn_lib.gather_pages(cc, block_tables)
+            return self._attn_block(
+                kind, p, x, cache, pos, router_bias, valid, write, view
+            )
+        if kind == "mamba":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = mamba_lib.mamba2_full(
+                p["mamba"], h, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                chunk=c.mamba_chunk, state=cache, valid=valid,
+            )
+            return x + out, state
+        if kind == "mlstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            # always the EXACT sequential cell, never mlstm_chunkwise even
+            # under cfg.xlstm_parallel: serving prefill must continue decode
+            # numerics bit-for-bit (the chunkwise reformulation reassociates
+            # floats ~1e-4, enough to flip near-tied greedy argmax against
+            # the decode/scan path); chunkwise stays a train/full-prefill
+            # lever where there is no decode stream to stay consistent with
+            out, state = xlstm_lib.mlstm_full(
+                p["mlstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk,
+                state=cache, valid=valid,
+            )
+            return x + out, state
+        if kind == "slstm":
+            h = apply_norm(c.norm_kind, x, p["norm"] or None)
+            out, state = xlstm_lib.slstm_full(
+                p["slstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk,
+                state=cache, valid=valid,
+            )
+            return x + out, state
+        raise ValueError(kind)
+
+    def prefill_step(self, params, batch, caches, positions, valid,
+                     block_tables=None):
+        """Multi-token prefill: ONE dispatch computes a whole (B, C) prompt
+        chunk — all C tokens in parallel — against caches at per-slot
+        offsets. batch: {'tokens': (B, C[, K]) [, task_ids, vlm extras]};
+        positions: (B,) position of each slot's first chunk token; valid:
+        (B, C) contiguous-prefix mask of real prompt tokens (all-False rows
+        ride along untouched, exactly like ``live=False`` in
+        ``decode_step``). Attention writes the chunk's KV slab first, then
+        query i attends with the same ``kv_idx <= pos + i`` mask decode
+        uses; recurrent layers run their full-sequence kernels with the
+        slot's cached state threaded in. Returns (logits (B, 1, [K,] V)
+        after each slot's LAST VALID token, new caches) — the lm head runs
+        on one gathered hidden state per slot, not the whole chunk (only
+        the last-valid logits are ever consumed; all-False rows yield
+        garbage logits the caller masks). Same logits shape as
+        ``decode_step``."""
+        x = self._constrain(self._embed(params, batch))
+        b, cl = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (b,))
+        rb = self._router_bias(params, batch, cl)
+        x, new_caches = self._run_cached_stages(
+            params, x, caches,
+            lambda kind, p, h, cache: self._block_prefill(
+                kind, p, h, cache, pos, valid, rb, block_tables
+            ),
+        )
+        # lm head over ONE hidden state per slot (its last valid token) —
+        # the (B, C, V) logits slab would be C x the largest matmul in the
+        # model for rows that are immediately discarded
+        n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        idx = jnp.maximum(n_valid - 1, 0)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B,1,d)
+        logits = self._logits(params, x_last, batch)
         return logits, new_caches

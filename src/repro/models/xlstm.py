@@ -104,10 +104,28 @@ def _chunked_scan(step, state, xs, t: int, chunk: int):
     return state, hs
 
 
-def mlstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
-    """Full-sequence mLSTM block. Returns (y, final_state)."""
+def _mask_if_gates(i_pre, f_pre, valid):
+    """Make invalid tokens exact no-ops on the mLSTM state: i -> -inf kills
+    the input term (i_sc == 0), f -> +inf makes log_f == 0 so the stabilized
+    forget scale is exactly 1 (state and stabilizer m carry through
+    unchanged). valid: (B, T) bool against (B, T, nh) gate pre-activations."""
+    if valid is None:
+        return i_pre, f_pre
+    keep = valid[:, :, None]
+    return (
+        jnp.where(keep, i_pre, -jnp.inf),
+        jnp.where(keep, f_pre, jnp.inf),
+    )
+
+
+def mlstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0,
+               valid=None):
+    """Full-sequence mLSTM block. Returns (y, final_state). valid: optional
+    (B, T) bool — invalid tokens leave the state untouched (serving prefill
+    chunks shorter than the chunk width)."""
     b, t, d_model = x.shape
     q, k, v, i_pre, f_pre, z, d_inner = _mlstm_qkvif(params, x, n_heads)
+    i_pre, f_pre = _mask_if_gates(i_pre, f_pre, valid)
     hd = d_inner // n_heads
     if state is None:
         state = mlstm_init_state(b, n_heads, hd)
@@ -136,7 +154,8 @@ def mlstm_step(params, x, state, *, n_heads: int, live=None):
 
 
 # ----------------------------------------------- chunkwise-parallel mLSTM
-def mlstm_chunkwise(params, x, *, n_heads: int, chunk: int = 64, state=None):
+def mlstm_chunkwise(params, x, *, n_heads: int, chunk: int = 64, state=None,
+                    valid=None):
     """Beyond-paper compute-term optimization: the EXACT stabilized mLSTM
     computed chunkwise-parallel — intra-chunk terms are (c x c) MXU matmuls,
     only one scan step per chunk carries (C, n, m). Algebraically identical
@@ -151,6 +170,7 @@ def mlstm_chunkwise(params, x, *, n_heads: int, chunk: int = 64, state=None):
     """
     b, t, d_model = x.shape
     q, k, v, i_pre, f_pre, z, d_inner = _mlstm_qkvif(params, x, n_heads)
+    i_pre, f_pre = _mask_if_gates(i_pre, f_pre, valid)
     hd = d_inner // n_heads
     if state is None:
         state = mlstm_init_state(b, n_heads, hd)
@@ -226,8 +246,12 @@ def slstm_init_state(b, n_heads, hd):
     return (z, z, z, jnp.zeros((b, n_heads), jnp.float32))  # c, n, h, m
 
 
-def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
-    """Sequential sLSTM with exponential gating + stabilizer. x: (B,T,d)."""
+def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0,
+               valid=None):
+    """Sequential sLSTM with exponential gating + stabilizer. x: (B,T,d).
+    valid: optional (B, T) bool — the recurrence (c, n, h, m) of invalid
+    tokens is frozen per step (h feeds the recurrent weights, so a gate-level
+    mask cannot express the freeze; the recurrence is sequential anyway)."""
     b, t, d_model = x.shape
     hd = d_model // n_heads
     pre = matmul(x, params["w_in"]).reshape(b, t, 4, n_heads, hd)
@@ -237,6 +261,7 @@ def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
 
     def step(st, inp):
         c, n, h, m = st
+        inp, keep = inp
         p = inp.astype(jnp.float32)  # (B, 4, nh, hd)
         rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (B, 4, nh, hd)
         z_pre, i_pre, f_pre, o_pre = [p[:, g] + rec[:, g] for g in range(4)]
@@ -250,9 +275,21 @@ def slstm_full(params, x, *, n_heads: int, state=None, chunk: int = 0):
         c_new = f_sc * c + i_sc * z_val
         n_new = f_sc * n + i_sc
         h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
-        return (c_new, n_new, h_new, m_new), h_new
+        new = (c_new, n_new, h_new, m_new)
+        new = jax.tree.map(
+            lambda nv, ov: jnp.where(
+                keep.reshape((-1,) + (1,) * (nv.ndim - 1)), nv, ov
+            ),
+            new, (c, n, h, m),
+        )
+        return new, new[2]
 
-    state, hs = _chunked_scan(step, state, pre.swapaxes(0, 1), t, chunk)
+    valid_t = (
+        jnp.ones((b, t), bool) if valid is None else valid
+    ).swapaxes(0, 1)
+    state, hs = _chunked_scan(
+        step, state, (pre.swapaxes(0, 1), valid_t), t, chunk
+    )
     h = hs.swapaxes(0, 1).reshape(b, t, d_model).astype(x.dtype)
     h = rms_norm(h, params["norm_gain"])
     return matmul(h, params["w_out"]), state

@@ -17,7 +17,12 @@ serving paths cannot drift):
   * prefill — admission writes whole (num_slots, C) prompt slices per
     dispatch (ceil(max_prompt_len / C) dispatches per admission round, all
     newly admitted slots prefilled together), with per-token validity masks
-    for heterogeneous prompt lengths.
+    for heterogeneous prompt lengths. Each chunk's C tokens are computed IN
+    PARALLEL by ``model.prefill_step`` (``prefill_mode="scan"`` selects the
+    per-token oracle instead — see ``repro.serve.step``).
+  * multimodal — VLM (pixtral-style) requests carry their vision embeds +
+    mask in ``Request.extras``; admission slices them into the prefill
+    dispatch alongside the tokens (they used to be dropped silently).
   * slot reuse — re-admission restores the slot's per-slot state to the
     pristine ``init_cache`` value inside the prefill dispatch (recurrent
     SSM/xLSTM states are cumulative and MUST be cleared; the mLSTM
@@ -60,6 +65,10 @@ class Request:
     tokens: np.ndarray  # (S0,) prompt
     max_new: int
     task_id: int = 0
+    # per-request model extras, aligned with the prompt: VLM requests carry
+    # {"vision_embeds": (S0, d_model) float32, "vision_mask": (S0,) bool}.
+    # None means a pure-text prompt (zero embeds, False mask).
+    extras: dict | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     # finished before emitting max_new tokens (slot capacity hit). submit()
@@ -80,6 +89,7 @@ class ContinuousBatcher:
         max_seq: int,
         prefill_chunk: int = 16,
         paging: PagingSpec | None = None,
+        prefill_mode: str = "parallel",
     ):
         self.model = model
         self.params = params
@@ -87,6 +97,7 @@ class ContinuousBatcher:
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
         self.paging = paging
+        self.prefill_mode = prefill_mode
         if paging is not None:
             # a slot's logical length is bounded by BOTH max_seq and its
             # block-table capacity
@@ -107,7 +118,7 @@ class ContinuousBatcher:
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
         self._tick_fn, self._prefill_fn = make_serve_step(
-            model, max_seq, paging
+            model, max_seq, paging, prefill_mode
         )
 
     # ------------------------------------------------------------- plumbing
@@ -148,7 +159,40 @@ class ContinuousBatcher:
                     f"pool only has {self.paging.num_blocks - 1} allocatable "
                     "blocks — it could never be admitted"
                 )
+        self._validate_extras(req, n)
         self.queue.append(req)
+
+    def _validate_extras(self, req: Request, n: int):
+        """Per-request extras must be usable by the prefill dispatch.
+
+        VLM (pixtral-style) inputs used to be dropped silently: admission
+        always dispatched ``extras={}``, so every vision token prefilled
+        with zero embeds and generation quietly degraded to text-only.
+        Extras are now wired through admission — but only shapes the model
+        can consume are accepted, and extras on a non-VLM model are an
+        error, not a no-op."""
+        cfg = self.model.cfg
+        if req.extras is None:
+            return
+        if cfg.input_mode != "vlm":
+            raise ValueError(
+                f"request {req.uid}: extras are only supported for "
+                f"input_mode='vlm' models, not {cfg.input_mode!r}"
+            )
+        missing = {"vision_embeds", "vision_mask"} - set(req.extras)
+        if missing:
+            raise ValueError(
+                f"request {req.uid}: vlm extras must carry "
+                f"'vision_embeds' and 'vision_mask' (missing {sorted(missing)})"
+            )
+        emb = np.asarray(req.extras["vision_embeds"])
+        msk = np.asarray(req.extras["vision_mask"])
+        if emb.shape != (n, cfg.d_model) or msk.shape != (n,):
+            raise ValueError(
+                f"request {req.uid}: vlm extras must be aligned with the "
+                f"prompt — want vision_embeds ({n}, {cfg.d_model}) and "
+                f"vision_mask ({n},), got {emb.shape} and {msk.shape}"
+            )
 
     def _task_ids(self) -> np.ndarray:
         return np.array(
@@ -170,7 +214,12 @@ class ContinuousBatcher:
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            if len(req.out) >= req.max_new or self.pos[s] >= self.slot_capacity - 1:
+            # capacity guard: pos is the NEXT write position, so the slot is
+            # exhausted only when pos == capacity (position capacity - 1 is
+            # writable; the old `>= capacity - 1` guard wasted the last
+            # token of every slot and truncated requests sized exactly to
+            # capacity)
+            if len(req.out) >= req.max_new or self.pos[s] >= self.slot_capacity:
                 req.done = True
                 # finished at the capacity guard, not by request completion
                 req.truncated = len(req.out) < req.max_new
@@ -210,18 +259,37 @@ class ContinuousBatcher:
         reset[newly] = True
         maxlen = max(len(self.active[s].tokens) for s in newly)
         c = self.prefill_chunk
+        vlm = self.model.cfg.input_mode == "vlm"
         first_logits = np.zeros(self.num_slots, object)
         for c0 in range(0, maxlen, c):
             tokens = np.zeros((self.num_slots, c), np.int32)
             valid = np.zeros((self.num_slots, c), bool)
+            extras = {}
+            if vlm:
+                emb = np.zeros((self.num_slots, c, self.model.cfg.d_model),
+                               np.float32)
+                msk = np.zeros((self.num_slots, c), bool)
             for s in newly:
-                t = np.asarray(self.active[s].tokens, np.int32)[c0 : c0 + c]
+                req = self.active[s]
+                t = np.asarray(req.tokens, np.int32)[c0 : c0 + c]
                 tokens[s, : len(t)] = t
                 valid[s, : len(t)] = True
+                if vlm and req.extras is not None and len(t):
+                    emb[s, : len(t)] = np.asarray(
+                        req.extras["vision_embeds"], np.float32
+                    )[c0 : c0 + len(t)]
+                    msk[s, : len(t)] = np.asarray(
+                        req.extras["vision_mask"], bool
+                    )[c0 : c0 + len(t)]
+            if vlm:
+                extras = {
+                    "vision_embeds": jnp.asarray(emb),
+                    "vision_mask": jnp.asarray(msk),
+                }
             last, self.caches, positions = self._prefill_fn(
                 self.params, jnp.asarray(tokens), task_ids, self.caches,
                 jnp.asarray(self.pos), jnp.asarray(valid),
-                jnp.asarray(reset), {}, self._block_tables(),
+                jnp.asarray(reset), extras, self._block_tables(),
             )
             self.prefill_dispatches += 1
             self.pos = np.asarray(positions)

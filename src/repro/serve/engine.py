@@ -42,10 +42,13 @@ class ServeEngine:
     max_seq: int
     prefill_chunk: int = 32
     paging: PagingSpec | None = None
+    # "parallel" (one dispatch computes the whole chunk) or "scan" (the
+    # per-token oracle) — see repro.serve.step.make_serve_step
+    prefill_mode: str = "parallel"
 
     def __post_init__(self):
         self._tick, self._prefill = make_serve_step(
-            self.model, self.max_seq, self.paging
+            self.model, self.max_seq, self.paging, self.prefill_mode
         )
 
     def _assign_block_tables(self, b: int, total_tokens: int):
@@ -122,7 +125,13 @@ class ServeEngine:
         if key is None:
             key = jax.random.PRNGKey(0)
         b, s0 = prompt_batch["tokens"].shape[:2]
-        assert s0 + num_tokens <= self.max_seq
+        if s0 + num_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({s0}) + num_tokens ({num_tokens}) = "
+                f"{s0 + num_tokens} tokens exceeds the cache capacity "
+                f"max_seq={self.max_seq}; the generation would be silently "
+                "truncated"
+            )
         block_tables = None
         if self.paging is not None:
             block_tables = self._assign_block_tables(b, s0 + num_tokens)
@@ -134,9 +143,15 @@ class ServeEngine:
         )
         live = jnp.ones(b, bool)
         outs = []
-        tok = _sample(logits, key, temperature)
-        for _ in range(num_tokens):
+        # the first sampled token gets its own subkey — reusing `key` here
+        # and then splitting it again below would correlate the first draw
+        # with every subsequent one
+        key, sub = jax.random.split(key)
+        tok = _sample(logits, sub, temperature)
+        for i in range(num_tokens):
             outs.append(np.asarray(tok))
+            if i + 1 == num_tokens:
+                break  # the last token needs no successor: skip the dispatch
             key, sub = jax.random.split(key)
             greedy, logits, caches = self._tick(
                 self.params, tok.astype(jnp.int32), task_ids, caches,

@@ -1,12 +1,13 @@
-"""Shared vectorized serving step: one jitted dispatch per decode tick.
+"""Shared vectorized serving steps: one jitted dispatch per decode tick,
+one jitted dispatch per (B, C) prefill chunk.
 
 Both serving front-ends (``ServeEngine`` for uniform batches and
 ``ContinuousBatcher`` for slot scheduling) delegate to the two functions
 built here, so their numerics cannot drift — greedy decoding is
 token-for-token identical between them by construction.
 
-``make_serve_step(model, max_seq, paging=None)`` returns two jitted
-callables:
+``make_serve_step(model, max_seq, paging=None, prefill_mode="parallel")``
+returns two jitted callables:
 
   * ``decode_tick(params, tokens, task_ids, caches, positions, live,
     block_tables)`` — advance EVERY slot one token at its own position
@@ -17,14 +18,39 @@ callables:
 
   * ``prefill_chunk(params, tokens, task_ids, caches, positions, valid,
     reset, extras, block_tables)`` — write a whole (B, C) prompt slice in
-    one dispatch via an in-graph ``lax.scan`` of the same decode step (so
-    prefill numerics == decode numerics exactly). ``valid[b, i]`` marks real
-    prompt tokens (slots admitted with shorter prompts, or slots not being
+    one dispatch. ``valid[b, i]`` marks real prompt tokens as a contiguous
+    prefix per row (slots admitted with shorter prompts, or slots not being
     prefilled at all, are padding); ``reset[b]`` restores a slot's per-slot
     state to the pristine ``init_cache`` value before writing (recurrent
     states are cumulative and must be cleared on slot reuse). Returns
     (logits after each slot's last valid token, new caches, advanced
     positions).
+
+``prefill_mode`` selects how the chunk is computed:
+
+  * ``"parallel"`` (default) — ``model.prefill_step``: ONE dispatch computes
+    all C chunk tokens in parallel. Attention writes the chunk's KV slab at
+    per-slot offsets and then runs query-chunked causal attention against
+    the cache prefix (the same ``kv_idx <= pos + i`` mask decode uses, so
+    sliding windows and paged views come along for free); mamba2's chunked
+    SSD and the xLSTM kernels run with the slot's recurrent cache threaded
+    in as the initial state; MoE routes the whole (B, C) slab under the
+    validity mask. Chunk compute is parallel — the only remaining scans are
+    the per-layer stack scan and the cross-chunk SSD/recurrent state scans.
+  * ``"scan"`` — the per-token ``lax.scan`` of ``decode_step`` bodies (the
+    PR 2 path): C sequential decode steps inside one dispatch. Kept as the
+    parity oracle — prefill numerics == decode numerics by construction —
+    and pinned against the parallel path in ``tests/test_serve_prefill.py``.
+
+MoE caveat: expert capacity is computed per DISPATCH (``apply_moe`` sizes
+its buffers from the tokens it is given), so when capacity BINDS the
+(B*C)-token parallel slab drops different tokens than C sequential B-token
+steps would — routing itself is per-token and identical, only the lossy
+capacity-overflow behaviour differs. Token-for-token parity between the
+two modes (and across chunk widths) is exact under dropless capacity
+(``capacity_factor >= num_experts``), which is what the parity tests and
+the benchmark pin; under binding capacity both modes are self-consistent
+but not interchangeable.
 
 ``paging`` (a ``repro.serve.paging.PagingSpec``) switches the attention
 caches to the shared block-pool layout: callers then pass the per-slot
@@ -65,6 +91,24 @@ def make_step_batch(cfg, step_tokens, task_ids, extras=None):
     return batch
 
 
+def make_chunk_batch(cfg, tokens, task_ids, extras=None):
+    """Assemble a (B, C) prefill-chunk batch.
+
+    tokens: (B, C) int32 — or (B, C, K) for audio codebooks. extras carries
+    the chunk's VLM inputs ((B, C, d) embeds + (B, C) mask); absent extras
+    mean a pure-text chunk (zero embeds, False mask)."""
+    batch = {"tokens": tokens, "task_ids": task_ids}
+    if cfg.input_mode == "vlm":
+        b, c = tokens.shape[:2]
+        if extras:
+            batch["vision_embeds"] = extras["vision_embeds"]
+            batch["vision_mask"] = extras["vision_mask"]
+        else:
+            batch["vision_embeds"] = jnp.zeros((b, c, cfg.d_model), jnp.float32)
+            batch["vision_mask"] = jnp.zeros((b, c), bool)
+    return batch
+
+
 def _logits_shape(cfg, b):
     if cfg.num_codebooks > 1:
         return (b, cfg.num_codebooks, cfg.vocab_size)
@@ -72,12 +116,17 @@ def _logits_shape(cfg, b):
 
 
 @functools.lru_cache(maxsize=None)
-def make_serve_step(model: TransformerLM, max_seq: int, paging=None):
+def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
+                    prefill_mode: str = "parallel"):
     """Build the (decode_tick, prefill_chunk) pair for one model/cache size.
 
-    Memoized on (model, max_seq, paging) — all frozen/hashable — so every
-    engine/batcher instance over the same model shares one compiled pair
-    instead of re-jitting per instance."""
+    Memoized on (model, max_seq, paging, prefill_mode) — all frozen/hashable
+    — so every engine/batcher instance over the same model shares one
+    compiled pair instead of re-jitting per instance."""
+    if prefill_mode not in ("parallel", "scan"):
+        raise ValueError(
+            f"prefill_mode must be 'parallel' or 'scan', got {prefill_mode!r}"
+        )
     cfg = model.cfg
 
     def decode_tick(params, tokens, task_ids, caches, positions, live,
@@ -91,7 +140,28 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None):
         next_tok = jnp.argmax(step_logits, axis=-1)
         return next_tok, step_logits, new_caches
 
-    def prefill_chunk(
+    def prefill_chunk_parallel(
+        params, tokens, task_ids, caches, positions, valid, reset, extras,
+        block_tables=None,
+    ):
+        b = tokens.shape[0]
+        caches = model.reset_slot_state(caches, reset, max_seq, paging)
+        batch = make_chunk_batch(cfg, tokens, task_ids, extras=extras)
+        # prefill_step returns each slot's LAST-VALID-token logits (B, 1,
+        # [K,] V) — the lm head never materializes the (B, C, V) slab
+        logits, caches = model.prefill_step(
+            params, batch, caches, positions, valid,
+            block_tables=block_tables,
+        )
+        last = logits[:, 0]
+        # slots with no valid token in this chunk report zeros — callers
+        # key off valid.any() anyway
+        n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        has = (n_valid > 0).reshape((b,) + (1,) * (last.ndim - 1))
+        last = jnp.where(has, last, jnp.zeros_like(last))
+        return last, caches, positions + n_valid
+
+    def prefill_chunk_scan(
         params, tokens, task_ids, caches, positions, valid, reset, extras,
         block_tables=None,
     ):
@@ -127,7 +197,12 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None):
         )
         return last, caches, positions
 
+    prefill = (
+        prefill_chunk_parallel
+        if prefill_mode == "parallel"
+        else prefill_chunk_scan
+    )
     return (
         jax.jit(decode_tick, donate_argnums=(3,)),
-        jax.jit(prefill_chunk, donate_argnums=(3,)),
+        jax.jit(prefill, donate_argnums=(3,)),
     )
