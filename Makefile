@@ -1,8 +1,8 @@
 # Tier-1 verification for every PR: `make ci` (or scripts/ci.sh) must be
 # green before merging.
-.PHONY: ci test bench-serve bench-smoke
+.PHONY: ci test bench-serve bench-smoke bench-smoke-pallas
 
-ci: test bench-smoke
+ci: test bench-smoke bench-smoke-pallas
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -11,7 +11,16 @@ bench-serve:
 	PYTHONPATH=src python benchmarks/serve_throughput.py
 
 # reduced serving benchmark for CI: runs in interpret/CPU mode and asserts
-# O(1) dispatches/tick, engine==batcher parity, and paged-vs-dense parity
-# with >=4x slots at equal KV memory (block_size 8 and 16)
+# O(1) dispatches/tick, engine==batcher parity, paged-vs-dense parity with
+# >=4x slots at equal KV memory (block_size 8 and 16), parallel==scan
+# prefill parity, and jnp==pallas attention-backend parity — and persists
+# the perf trajectory (decode/prefill tok/s per backend, slots-per-KV-byte)
+# to BENCH_serve.json so future PRs can diff perf
 bench-smoke:
-	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6
+	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6 --json BENCH_serve.json
+
+# the same serving loop with attn_backend="pallas" as the DEFAULT for every
+# section (interpret mode on CPU), so the kernel serving path — not just the
+# jnp default — is exercised end-to-end on every PR
+bench-smoke-pallas:
+	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends

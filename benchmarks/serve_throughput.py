@@ -15,19 +15,31 @@ count, and ASSERTS the properties the serving stack exists for:
     spends what requests actually use), and
   * the parallel-within-chunk prefill matches the per-token-scan oracle
     token-for-token at the SAME dispatch count (ceil(S0 / chunk) per
-    admission round), reporting prompt tokens/sec for both paths.
+    admission round), reporting prompt tokens/sec for both paths, and
+  * the "pallas" attention backend (flash-decode + chunked flash-prefill
+    kernels, dense AND block-table paged) matches the "jnp" backend
+    token-for-token, reporting decode and prefill tok/s for both backends.
 
 The interesting number on CPU is dispatches/tick and the slot-scaling of
 tokens/sec (per-dispatch overhead dominates small smoke models, which is
 exactly the regime where the old one-slot-per-dispatch loop collapsed to
-1/num_slots of the throughput).
+1/num_slots of the throughput); the pallas kernels run in interpret mode
+on CPU, so their tok/s here measures the code path, not TPU speed.
+
+``--json [PATH]`` persists the perf trajectory (decode/prefill tok/s per
+backend, slots-per-KV-byte) to ``BENCH_serve.json`` (default) so future
+PRs can diff perf; ``make bench-smoke`` emits it on every CI run.
 
   PYTHONPATH=src python benchmarks/serve_throughput.py [--arch olmo_1b]
       [--slots 1 2 4 8] [--prompt-len 8] [--max-new 16] [--skip-paged]
+      [--skip-prefill] [--skip-backends] [--attn-backend jnp|pallas]
+      [--json [PATH]]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
 import time
@@ -125,6 +137,11 @@ def bench_paged(model, cfg):
 
     print(f"\npaged KV cache: dense {dense_slots} slots x {max_seq} seq "
           f"({dense_bytes / 1e3:.0f} kB KV) vs paged pool of equal size")
+    report = {
+        "dense_slots": dense_slots,
+        "dense_kv_bytes": dense_bytes,
+        "dense_slots_per_kv_byte": dense_slots / dense_bytes,
+    }
     for block_size in (8, 16):
         spec = PagingSpec.sized(
             block_size, max_seq, pool_tokens=dense_slots * max_seq
@@ -156,6 +173,12 @@ def bench_paged(model, cfg):
         assert not any(r.truncated for r in done)
         assert batcher.allocator.free_blocks == spec.num_blocks - 1
         tok = sum(len(r.out) for r in done)
+        report[f"block_{block_size}"] = {
+            "slots": paged_slots,
+            "kv_bytes": paged_bytes,
+            "slots_per_kv_byte": paged_slots / paged_bytes,
+            "tok_per_s": tok / dt,
+        }
         print(f"  block_size={block_size:>2}: {paged_slots} slots "
               f"({paged_slots // dense_slots}x dense) on "
               f"{paged_bytes / 1e3:.0f} kB KV, {tok} tokens in {dt:.1f}s "
@@ -164,6 +187,7 @@ def bench_paged(model, cfg):
     print(f"OK: paged cache serves {paged_slots // dense_slots}x the slots "
           f"at equal KV memory, token-for-token with the dense engine "
           f"(block_size 8 and 16)")
+    return report
 
 
 def bench_prefill(model, params, cfg, num_slots=2, prompt_len=16,
@@ -228,6 +252,93 @@ def bench_prefill(model, params, cfg, num_slots=2, prompt_len=16,
     speed = results["scan"]["prefill_s"] / results["parallel"]["prefill_s"]
     print(f"OK: parallel == scan token-for-token at {want_disp} dispatches "
           f"each; parallel prefill ran {speed:.2f}x the scan path")
+    tok = num_slots * prompt_len
+    return {
+        mode: {"prefill_tok_per_s": tok / r["prefill_s"]}
+        for mode, r in results.items()
+    }
+
+
+def bench_backends(cfg, params, num_slots=2, prompt_len=6, max_new=6,
+                   chunk=3, block_size=8):
+    """jnp-vs-pallas attention backend over the SAME requests: greedy token
+    parity (dense and block-table paged) plus decode / prefill tok/s per
+    backend. The backend flag lives on the (frozen) config, so each backend
+    memoizes its own compiled step pair; off-TPU the pallas kernels run in
+    interpret mode — the parity assert is the point there, the tok/s split
+    only becomes meaningful on TPU."""
+    if cfg.uses_moe:
+        # dropless capacity so the engine-vs-batcher dispatch shapes can't
+        # change expert drops (same convention as bench_prefill)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    max_seq = prompt_len + max_new + 4
+    spec = PagingSpec.sized(
+        block_size, max_seq, pool_tokens=num_slots * max_seq
+    )
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (prompt_len,)).astype(np.int32)
+        for _ in range(num_slots)
+    ]
+
+    def run(backend, paging):
+        model = TransformerLM(dataclasses.replace(cfg, attn_backend=backend))
+        stats = {}
+        for attempt in ("warmup", "timed"):
+            batcher = ContinuousBatcher(
+                model, params, num_slots=num_slots, max_seq=max_seq,
+                prefill_chunk=chunk, paging=paging,
+            )
+            for i, p in enumerate(prompts):
+                batcher.submit(Request(uid=i, tokens=p, max_new=max_new,
+                                       task_id=i % cfg.num_tasks))
+            t0 = time.perf_counter()
+            batcher._admit()  # all slots admitted in one chunked round
+            stats["prefill_s"] = time.perf_counter() - t0
+            batcher._finish_ready()
+            t0 = time.perf_counter()
+            done = batcher.run()
+            stats["decode_s"] = time.perf_counter() - t0
+            stats["outputs"] = {r.uid: r.out for r in done}
+        stats["prefill_tok_per_s"] = num_slots * prompt_len / stats["prefill_s"]
+        # prefill emits each request's first token; the rest are decode ticks
+        stats["decode_tok_per_s"] = (
+            num_slots * (max_new - 1) / stats["decode_s"]
+        )
+        return stats
+
+    print(f"\nattention backends: jnp vs pallas, {num_slots} slots x "
+          f"{prompt_len} prompt + {max_new} new, dense + paged "
+          f"(block_size {block_size})")
+    report = {}
+    for backend in ("jnp", "pallas"):
+        dense = run(backend, None)
+        paged = run(backend, spec)
+        report[backend] = {
+            "decode_tok_per_s": dense["decode_tok_per_s"],
+            "prefill_tok_per_s": dense["prefill_tok_per_s"],
+            "paged_decode_tok_per_s": paged["decode_tok_per_s"],
+            "paged_prefill_tok_per_s": paged["prefill_tok_per_s"],
+        }
+        print(f"  {backend:>6}: decode {dense['decode_tok_per_s']:>8.1f} tok/s "
+              f"(paged {paged['decode_tok_per_s']:.1f}), "
+              f"prefill {dense['prefill_tok_per_s']:>8.1f} tok/s "
+              f"(paged {paged['prefill_tok_per_s']:.1f})")
+        report[backend]["_outputs"] = {
+            "dense": dense["outputs"], "paged": paged["outputs"],
+        }
+    # token parity: pallas == jnp, dense and paged
+    for layout in ("dense", "paged"):
+        assert (
+            report["jnp"]["_outputs"][layout]
+            == report["pallas"]["_outputs"][layout]
+        ), f"pallas backend diverged from jnp ({layout})"
+    assert report["jnp"]["_outputs"]["dense"] == report["jnp"]["_outputs"]["paged"]
+    for backend in report:
+        del report[backend]["_outputs"]
+    print("OK: pallas backend == jnp backend token-for-token "
+          "(dense and paged)")
+    return report
 
 
 def main():
@@ -240,14 +351,27 @@ def main():
                     help="skip the paged-vs-dense memory/parity section")
     ap.add_argument("--skip-prefill", action="store_true",
                     help="skip the parallel-vs-scan prefill section")
+    ap.add_argument("--skip-backends", action="store_true",
+                    help="skip the jnp-vs-pallas attention-backend section")
+    ap.add_argument("--attn-backend", default="jnp",
+                    choices=("jnp", "pallas"),
+                    help="attention backend for ALL sections (the backends "
+                    "section always compares both)")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="write the perf report to PATH "
+                    "(default BENCH_serve.json) for trajectory diffing")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)
+    if args.attn_backend != "jnp":
+        cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
     model = TransformerLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_seq = args.prompt_len + args.max_new + 8
 
     print(f"arch={args.arch} (smoke) backend={jax.default_backend()} "
+          f"attn_backend={cfg.attn_backend} "
           f"prompt={args.prompt_len} max_new={args.max_new}")
     print(f"{'slots':>6} {'tok/s':>10} {'ticks':>6} {'decode_disp':>12} "
           f"{'disp/tick':>10} {'prefill_disp':>13}")
@@ -298,13 +422,36 @@ def main():
           f"{rows[-1]['num_slots']} slots: {scale:.2f}x "
           f"(per-slot tok/s: {', '.join(f'{p:.1f}' for p in per_slot)})")
 
+    report = {
+        "arch": args.arch,
+        "platform": jax.default_backend(),
+        "attn_backend": cfg.attn_backend,
+        "prompt_len": args.prompt_len,
+        "max_new": args.max_new,
+        "decode": [
+            {k: r[k] for k in ("num_slots", "tokens", "tok_per_s", "ticks",
+                               "decode_dispatches", "prefill_dispatches")}
+            for r in rows
+        ],
+    }
+
     # ---- property 3: paged cache = more slots at equal KV memory ----
     if not args.skip_paged:
-        bench_paged(model, cfg)
+        report["paged"] = bench_paged(model, cfg)
 
     # ---- property 4: parallel prefill == scan oracle, same dispatches ----
     if not args.skip_prefill:
-        bench_prefill(model, params, cfg)
+        report["prefill"] = bench_prefill(model, params, cfg)
+
+    # ---- property 5: pallas backend == jnp backend, with tok/s split ----
+    if not args.skip_backends:
+        report["backends"] = bench_backends(cfg, params)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote perf report to {args.json}")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,13 @@
      in parallel); ``prefill_mode="scan"`` replays the per-token oracle and
      the outputs must match token-for-token.
 
+  5. Attention backends: rebuilding the model with
+     ``dataclasses.replace(cfg, attn_backend="pallas")`` serves decode from
+     the flash-decode Pallas kernels and prefill from the chunked
+     flash-prefill kernel (compiled on TPU, interpret mode on this CPU run)
+     with identical greedy output — the serving front-ends need no change,
+     the flag rides on the config.
+
 Plus a numerical cross-check of the flash-decode Pallas kernel (per-slot
 position vector) against the serving attention path.
 
@@ -115,6 +122,27 @@ scan_match = all(
 )
 print(f"per-token-scan prefill oracle in {dt:.1f}s: outputs match the "
       f"parallel prefill path: {scan_match}")
+
+# ---- attention backend: serve straight from the Pallas flash kernels ----
+import dataclasses
+
+pallas_model = TransformerLM(dataclasses.replace(cfg, attn_backend="pallas"))
+flash = ContinuousBatcher(pallas_model, params, num_slots=2, max_seq=96)
+for i in range(batch):
+    flash.submit(Request(
+        uid=i, tokens=np.asarray(prompts["tokens"][i]), max_new=32,
+        task_id=int(prompts["task_ids"][i]),
+    ))
+t0 = time.perf_counter()
+done_flash = flash.run()
+dt = time.perf_counter() - t0
+flash_match = all(
+    {r.uid: r.out for r in done_flash}[i] == out[i].tolist()
+    for i in range(batch)
+)
+print(f"attn_backend='pallas' (flash decode + chunked flash prefill, "
+      f"interpret mode on {jax.default_backend()}) in {dt:.1f}s: outputs "
+      f"match the jnp backend: {flash_match}")
 
 # ---- kernel cross-check: serving attention == Pallas flash-decode ----
 # per-slot decode positions, as the vectorized batcher issues them

@@ -3,7 +3,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-# serving benchmark smoke: O(1)-dispatch, engine==batcher parity, and
-# paged-cache parity/memory assertions run on every PR (interpret/CPU
-# mode). The flag set lives in ONE place — the Makefile target.
+# serving benchmark smoke: O(1)-dispatch, engine==batcher parity, paged-cache
+# parity/memory, prefill-mode parity and jnp-vs-pallas backend parity run on
+# every PR (interpret/CPU mode), persisting BENCH_serve.json; then the whole
+# serve loop once more with attn_backend="pallas" so the Pallas kernel path
+# is the one driving decode + prefill, not just the jnp default. The flag
+# sets live in ONE place — the Makefile targets.
 make bench-smoke
+make bench-smoke-pallas

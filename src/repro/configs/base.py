@@ -60,6 +60,18 @@ class ArchConfig:
     q_chunk: int = 1024
     mamba_chunk: int = 128
     remat: bool = True
+    # serving attention backend: "jnp" (masked einsum over the cache /
+    # gathered pages) or "pallas" (flash decode + chunked flash prefill
+    # kernels, dense and block-table paged). "pallas" covers GQA attention
+    # (causal + sliding window); MLA layers fall back to the jnp path and
+    # recurrent mamba2/xLSTM blocks have no attention — see
+    # repro.kernels.runtime.resolve_attn_backend for the fallback matrix.
+    # The attention kernels use TPU-specific Pallas primitives, so they
+    # COMPILE only on TPU and run in interpret mode everywhere else
+    # (including GPU) — functionally identical but slow; CPU CI relies on
+    # that to exercise the kernel code path, but off-TPU production serving
+    # should keep the "jnp" default.
+    attn_backend: str = "jnp"
     # unroll the period scan into a Python loop (exact HLO cost probes)
     unroll: bool = False
     # §Perf levers (default OFF == paper-faithful baseline):
@@ -115,6 +127,7 @@ class ArchConfig:
             assert self.num_experts >= self.top_k > 0
         for k in self.pattern:
             assert k in ("attn", "attn_moe", "shared_attn", "mamba", "mlstm", "slstm")
+        assert self.attn_backend in ("jnp", "pallas"), self.attn_backend
 
 
 _ARCHS = [

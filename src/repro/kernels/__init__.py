@@ -5,3 +5,10 @@ from repro.kernels.decode_attention import (
     paged_decode_attention,
     paged_decode_attention_reference,
 )
+from repro.kernels.prefill_attention import (
+    paged_prefill_attention,
+    paged_prefill_attention_reference,
+    prefill_attention,
+    prefill_attention_reference,
+)
+from repro.kernels.runtime import resolve_attn_backend

@@ -1,0 +1,8 @@
+from repro.kernels.prefill_attention.ops import (
+    paged_prefill_attention,
+    prefill_attention,
+)
+from repro.kernels.prefill_attention.ref import (
+    paged_prefill_attention_reference,
+    prefill_attention_reference,
+)

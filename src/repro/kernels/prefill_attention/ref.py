@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for chunked flash-prefill attention (GQA, causal /
+windowed, per-slot position offsets)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_reference(
+    q: jax.Array,  # (B, KVH, C, G, hd)
+    k: jax.Array,  # (B, S, KVH, hd)
+    v: jax.Array,  # (B, S, KVH, hd)
+    pos: jax.Array,  # (B,) or () positions of the chunk's FIRST token
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Query i of slot b sits at ``pos[b] + i`` and reads
+    ``kv_idx <= pos[b] + i`` only — the decode mask with a per-query
+    offset, which also gives in-chunk causality for free."""
+    hd = q.shape[-1]
+    cq = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum(
+        "bkcgd,bskd->bkcgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (B, KVH, C, G, S)
+    kv_pos = jnp.arange(k.shape[1])
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (q.shape[0],))
+    q_pos = pos_b[:, None] + jnp.arange(cq)[None, :]  # (B, C)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, C, S)
+    if window is not None:
+        mask &= kv_pos[None, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkcgs,bskd->bkcgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_prefill_attention_reference(
+    q: jax.Array,  # (B, KVH, C, G, hd)
+    k_pool: jax.Array,  # (num_blocks, block_size, KVH, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks)
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather each slot's logical KV view from
+    the shared pool, then run the dense reference (masking by ``pos + i``
+    hides null-block garbage exactly as in the serving path)."""
+
+    def view(pool):
+        g = pool[block_tables]  # (B, MB, bs, KVH, hd)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+    return prefill_attention_reference(
+        q, view(k_pool), view(v_pool), pos, window=window
+    )

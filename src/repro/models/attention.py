@@ -2,9 +2,13 @@
 
 Full-sequence (train / prefill) attention is query-chunked (lax.scan over
 query blocks) so peak score memory is (block x kv_len) instead of
-(seq x seq) — the pure-JAX analogue of flash attention; the TPU Pallas
-decode kernel lives in repro/kernels/decode_attention.py and is numerically
-checked against ``decode_attend`` here.
+(seq x seq) — the pure-JAX analogue of flash attention. The SERVING cache
+paths (decode tick + parallel prefill chunk) dispatch through
+``cached_attend`` on ``ArchConfig.attn_backend``: "jnp" runs the masked
+einsum ``decode_attend`` below (the reference semantics), "pallas" runs the
+flash kernels in repro/kernels/decode_attention (one query token) and
+repro/kernels/prefill_attention (a (B, C) chunk slab), each oracle-checked
+against the jnp math.
 
 Shapes: x (B, S, d); q (B, S, H, hd); kv (B, S, KVH, hd); caches are
 (B, max_seq, KVH, hd) ring-less buffers written at ``pos``.
@@ -160,6 +164,61 @@ def decode_attend(
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(q.dtype), v_cache)
     return out.astype(q.dtype).reshape(b, c, h, v_cache.shape[-1])
+
+
+# ------------------------------------------------- backend dispatch (GQA)
+def cached_attend(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    pos: Array,
+    *,
+    sliding_window: int | None = None,
+    backend: str = "jnp",
+    block_tables: Array | None = None,
+) -> Array:
+    """GQA chunk-of-queries attention against the cache, dispatching on the
+    serving attention backend (``ArchConfig.attn_backend``, already resolved
+    through ``repro.kernels.runtime.resolve_attn_backend`` — MLA never
+    reaches this function).
+
+    q: (B, C, H, hd) — C == 1 is the decode tick, C > 1 the parallel
+    prefill chunk. Dense caches are (B, S, KVH, hd); with ``block_tables``
+    the caches are the shared (num_blocks, block_size, KVH, hd) pools.
+
+      * "jnp"    — masked-softmax ``decode_attend`` over the dense cache or
+        the ``gather_pages`` view of the pool (the reference semantics every
+        other path is pinned against).
+      * "pallas" — flash kernels: ``decode_attention`` / ``prefill_attention``
+        stream the dense cache, ``paged_*`` walk the block table directly in
+        the kernel grid (the gather is never materialized in HBM). Compiled
+        on TPU, interpret mode elsewhere (repro.kernels.runtime), identical
+        ``kv_idx <= pos + i`` masking — token parity with "jnp" is pinned by
+        tests/test_serve_backend.py and benchmarks/serve_throughput.py.
+    """
+    if backend == "pallas":
+        from repro.kernels.decode_attention.ops import (
+            decode_attention,
+            paged_decode_attention,
+        )
+        from repro.kernels.prefill_attention.ops import (
+            paged_prefill_attention,
+            prefill_attention,
+        )
+
+        decode = q.shape[1] == 1  # static under jit: C is a trace constant
+        if block_tables is None:
+            op = decode_attention if decode else prefill_attention
+            return op(q, k_cache, v_cache, pos, window=sliding_window)
+        op = paged_decode_attention if decode else paged_prefill_attention
+        return op(q, k_cache, v_cache, block_tables, pos,
+                  window=sliding_window)
+    if block_tables is not None:
+        k_cache = gather_pages(k_cache, block_tables)
+        v_cache = gather_pages(v_cache, block_tables)
+    return decode_attend(
+        q, k_cache, v_cache, pos, sliding_window=sliding_window
+    )
 
 
 # --------------------------------------------------------- paged KV cache

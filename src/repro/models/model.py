@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.runtime import resolve_attn_backend
 from repro.models import attention as attn_lib
 from repro.models import mamba2 as mamba_lib
 from repro.models import xlstm as xlstm_lib
@@ -502,15 +503,38 @@ class TransformerLM:
         mask = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
         return jnp.where(mask, val.astype(cache.dtype), cache)
 
+    def _make_attend(self, pos, block_tables):
+        """Backend-dispatching GQA attention closure for one serving
+        dispatch. The effective backend is resolved ONCE per trace through
+        the fallback matrix (``repro.kernels.runtime.resolve_attn_backend``):
+        "pallas" serves GQA from the flash kernels (dense or block-table
+        paged — the paged kernels consume the pool + table directly, no
+        gathered view); MLA configs resolve to "jnp" and never build this
+        closure's pallas path. All arguments are trace-time constants or
+        traced arrays, so varying batch CONTENT never retraces."""
+        c = self.cfg
+        backend = resolve_attn_backend(c.attn_backend, mla=c.use_mla)
+        return lambda q, kc, vc: attn_lib.cached_attend(
+            q, kc, vc, pos, sliding_window=c.sliding_window,
+            backend=backend, block_tables=block_tables,
+        )
+
     def _attn_block(
         self, kind, p, x, cache, pos, router_bias, moe_live, write, view,
+        attend,
     ):
         """Attention block body shared by decode (C == 1) and parallel
         prefill (C > 1): project the chunk, write its KV slab through
-        ``write``, attend over the ``view`` of the cache with per-query
-        positions ``pos + i``, then MLP/MoE. x: (B, C, d); pos: (B,)
-        first-token positions; moe_live: (B,) live or (B, C) valid mask —
-        ``apply_moe`` accepts either."""
+        ``write``, attend with per-query positions ``pos + i``, then
+        MLP/MoE. GQA attends through ``attend(q, k_cache, v_cache)`` — the
+        backend dispatcher (``attn_lib.cached_attend``) that picks the jnp
+        masked-einsum path or the Pallas flash kernels and consumes raw
+        caches (dense stripes OR paged pools). MLA always attends over the
+        jnp ``view`` of the cache (the absorbed-matrix decode runs in the
+        compressed latent space — see repro.kernels.runtime for the
+        fallback matrix). x: (B, C, d); pos: (B,) first-token positions;
+        moe_live: (B,) live or (B, C) valid mask — ``apply_moe`` accepts
+        either."""
         c = self.cfg
         b, cl = x.shape[:2]
         q_pos = pos[:, None] + jnp.arange(cl)[None, :]  # (B, C)
@@ -539,10 +563,7 @@ class TransformerLM:
             k = attn_lib.apply_rope(k, q_pos, c.rope_theta)
             k_cache = write(k_cache, k)
             v_cache = write(v_cache, v)
-            o = attn_lib.decode_attend(
-                q, view(k_cache), view(v_cache), pos,
-                sliding_window=c.sliding_window,
-            )
+            o = attend(q, k_cache, v_cache)
             out = matmul(
                 o.reshape(b, cl, c.num_heads * c.head_dim), p["attn"]["wo"]
             )
@@ -577,8 +598,10 @@ class TransformerLM:
                     cc, new, pos, block_tables, live
                 )
                 view = lambda cc: attn_lib.gather_pages(cc, block_tables)
+            attend = self._make_attend(pos, block_tables)
             return self._attn_block(
-                kind, p, x, cache, pos, router_bias, live, write, view
+                kind, p, x, cache, pos, router_bias, live, write, view,
+                attend,
             )
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -649,6 +672,9 @@ class TransformerLM:
         block_tables: optional (B, max_blocks) int32 — caches must then come
         from ``init_cache(..., paging=spec)`` (shared attention pools;
         recurrent states stay dense and ignore the table).
+        GQA attention dispatches on ``cfg.attn_backend`` ("pallas" = flash
+        decode kernels, dense or paged; MLA/recurrent layers always take
+        the jnp path — see repro.kernels.runtime).
         Returns (logits (B,1,[K,]V), new caches)."""
         x = self._constrain(self._embed(params, batch))
         b = x.shape[0]
@@ -684,8 +710,10 @@ class TransformerLM:
                     cc, new, pos, block_tables, valid
                 )
                 view = lambda cc: attn_lib.gather_pages(cc, block_tables)
+            attend = self._make_attend(pos, block_tables)
             return self._attn_block(
-                kind, p, x, cache, pos, router_bias, valid, write, view
+                kind, p, x, cache, pos, router_bias, valid, write, view,
+                attend,
             )
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -726,8 +754,10 @@ class TransformerLM:
         ride along untouched, exactly like ``live=False`` in
         ``decode_step``). Attention writes the chunk's KV slab first, then
         query i attends with the same ``kv_idx <= pos + i`` mask decode
-        uses; recurrent layers run their full-sequence kernels with the
-        slot's cached state threaded in. Returns (logits (B, 1, [K,] V)
+        uses (via the chunked flash-prefill kernel when
+        ``cfg.attn_backend == "pallas"``); recurrent layers run their
+        full-sequence kernels with the slot's cached state threaded in.
+        Returns (logits (B, 1, [K,] V)
         after each slot's LAST VALID token, new caches) — the lm head runs
         on one gathered hidden state per slot, not the whole chunk (only
         the last-valid logits are ever consumed; all-False rows yield

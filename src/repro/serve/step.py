@@ -59,6 +59,17 @@ caches to the shared block-pool layout: callers then pass the per-slot
 Paged pools are NOT cleared on reset (see ``TransformerLM.reset_slot_state``
 for why that is sound); only the dense recurrent entries are.
 
+Attention backend: both steps inherit ``model.cfg.attn_backend``
+transparently — the flag is part of the (frozen, hashable) config, so a
+"pallas" model memoizes its own compiled step pair in which GQA decode runs
+the flash-decode Pallas kernels and the prefill chunk runs the chunked
+flash-prefill kernel (dense or block-table paged; MLA and recurrent layers
+fall back to jnp — see ``repro.kernels.runtime.resolve_attn_backend``).
+Neither front-end needs any change: build the model with
+``dataclasses.replace(cfg, attn_backend="pallas")`` and every dispatch
+below serves from the kernels, token-for-token identical to the jnp
+backend (pinned by tests/test_serve_backend.py and the serving benchmark).
+
 Chunked prefill costs ceil(S0 / C) dispatches per admission round instead
 of S0; the decode path is exactly one dispatch per tick regardless of slot
 count.

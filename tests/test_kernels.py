@@ -1,21 +1,36 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis property tests,
 always against the pure-jnp ref.py oracles (interpret mode executes the real
-kernel bodies on CPU)."""
+kernel bodies on CPU).
+
+Only the property tests need hypothesis (requirements-dev.txt); the
+parametrized oracle sweeps are tier-1 and run everywhere — a module-level
+importorskip used to silently drop ALL kernel coverage on machines without
+hypothesis."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
-)
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip; oracle sweeps still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import band_graph
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_attention_reference
 from repro.kernels.graph_mix.kernel import graph_mix_pallas
 from repro.kernels.graph_mix.ref import graph_mix_reference
+from repro.kernels.prefill_attention.kernel import (
+    paged_prefill_attention_pallas,
+    prefill_attention_pallas,
+)
+from repro.kernels.prefill_attention.ref import (
+    paged_prefill_attention_reference,
+    prefill_attention_reference,
+)
 
 
 # ------------------------------------------------------------- graph_mix
@@ -48,20 +63,24 @@ def test_graph_mix_matches_paper_update():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
-@settings(deadline=None, max_examples=25)
-@given(
-    m=st.integers(2, 24),
-    d=st.integers(1, 300),
-    block=st.sampled_from([128, 256]),
-    seed=st.integers(0, 10_000),
-)
-def test_graph_mix_property(m, d, block, seed):
-    rng = np.random.default_rng(seed)
-    mu = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
-    theta = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
-    got = graph_mix_pallas(mu, theta, block_d=block, interpret=True)
-    want = graph_mix_reference(mu, theta)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        m=st.integers(2, 24),
+        d=st.integers(1, 300),
+        block=st.sampled_from([128, 256]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_graph_mix_property(m, d, block, seed):
+        rng = np.random.default_rng(seed)
+        mu = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+        theta = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        got = graph_mix_pallas(mu, theta, block_d=block, interpret=True)
+        want = graph_mix_reference(mu, theta)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-4
+        )
 
 
 def test_graph_mix_row_stochastic_preserves_constants():
@@ -117,26 +136,32 @@ def test_decode_attention_sliding_window():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
-@settings(deadline=None, max_examples=20)
-@given(
-    s=st.integers(16, 640),
-    pos_frac=st.floats(0.0, 1.0),
-    kvh=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2, 6]),
-    seed=st.integers(0, 10_000),
-)
-def test_decode_attention_property(s, pos_frac, kvh, g, seed):
-    """Invariant: kernel == oracle for any cache length / decode position,
-    including pos << S (most of the cache masked)."""
-    rng = np.random.default_rng(seed)
-    b, hd = 1, 64
-    pos = jnp.asarray(int(pos_frac * (s - 1)), jnp.int32)
-    q = jnp.asarray(rng.standard_normal((b, kvh, g, hd)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
-    got = decode_attention_pallas(q, k, v, pos, block_s=128, interpret=True)
-    want = decode_attention_reference(q, k, v, pos)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        s=st.integers(16, 640),
+        pos_frac=st.floats(0.0, 1.0),
+        kvh=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 6]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_decode_attention_property(s, pos_frac, kvh, g, seed):
+        """Invariant: kernel == oracle for any cache length / decode
+        position, including pos << S (most of the cache masked)."""
+        rng = np.random.default_rng(seed)
+        b, hd = 1, 64
+        pos = jnp.asarray(int(pos_frac * (s - 1)), jnp.int32)
+        q = jnp.asarray(rng.standard_normal((b, kvh, g, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+        got = decode_attention_pallas(
+            q, k, v, pos, block_s=128, interpret=True
+        )
+        want = decode_attention_reference(q, k, v, pos)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=3e-5
+        )
 
 
 def test_decode_attention_matches_model_path():
@@ -157,3 +182,183 @@ def test_decode_attention_matches_model_path():
     np.testing.assert_allclose(
         np.asarray(got.reshape(b, 1, h, hd)), np.asarray(want), atol=3e-5
     )
+
+
+# ------------------------------------------------------ prefill_attention
+def _prefill_case(seed, b, s, kvh, g, cq, hd=64):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, kvh, cq, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    # ragged per-slot offsets: every slot's chunk starts at its own depth
+    pos = jnp.asarray(
+        rng.integers(0, s - cq + 1, (b,)).astype(np.int32)
+    )
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("cq", [1, 3, 8])
+@pytest.mark.parametrize("kvh,g", [(1, 4), (2, 2), (4, 1)])
+@pytest.mark.parametrize("s,block_s", [(256, 128), (300, 128)])
+def test_prefill_attention_chunk_widths(cq, kvh, g, s, block_s):
+    """Oracle parity across chunk widths C (C == 1 degenerates to the
+    decode mask), GQA group shapes, and non-divisible cache lengths, with
+    ragged per-slot position offsets."""
+    q, k, v, pos = _prefill_case(cq * 10 + kvh, 2, s, kvh, g, cq)
+    got = prefill_attention_pallas(
+        q, k, v, pos, block_s=block_s, interpret=True
+    )
+    want = prefill_attention_reference(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_prefill_attention_sliding_window():
+    q, k, v, pos = _prefill_case(7, 2, 512, 2, 2, 5)
+    got = prefill_attention_pallas(
+        q, k, v, pos, block_s=128, window=64, interpret=True
+    )
+    want = prefill_attention_reference(q, k, v, pos, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_prefill_attention_matches_model_path():
+    """Chunk kernel == the model's decode_attend with C > 1 chunk queries
+    (the serving prefill jnp path)."""
+    from repro.models.attention import decode_attend
+
+    rng = np.random.default_rng(11)
+    b, s, kvh, g, cq, hd = 2, 256, 2, 4, 6, 64
+    h = kvh * g
+    q = jnp.asarray(rng.standard_normal((b, cq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    pos = jnp.asarray([40, 170], jnp.int32)
+    qg = q.reshape(b, cq, kvh, g, hd).transpose(0, 2, 1, 3, 4)
+    got = prefill_attention_pallas(qg, k, v, pos, block_s=128, interpret=True)
+    got = got.transpose(0, 2, 1, 3, 4).reshape(b, cq, h, hd)
+    want = decode_attend(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        s=st.integers(16, 512),
+        cq=st.integers(1, 8),
+        kvh=st.sampled_from([1, 2]),
+        g=st.sampled_from([1, 3]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_prefill_attention_property(s, cq, kvh, g, seed):
+        """Invariant: kernel == oracle for any cache length / chunk width /
+        per-slot offsets, including chunks near the cache start (pos ~ 0)."""
+        if cq > s:
+            cq = s
+        q, k, v, pos = _prefill_case(seed, 2, s, kvh, g, cq)
+        got = prefill_attention_pallas(
+            q, k, v, pos, block_s=128, interpret=True
+        )
+        want = prefill_attention_reference(q, k, v, pos)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=5e-5
+        )
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+@pytest.mark.parametrize("window", [None, 24])
+def test_paged_prefill_attention_oracle(block_size, window):
+    """Paged chunk kernel == gather-then-dense oracle at serving block
+    sizes, GQA + sliding window, ragged per-slot offsets, shuffled block
+    tables (physical pages deliberately out of logical order)."""
+    rng = np.random.default_rng(13)
+    b, kvh, g, cq, hd = 2, 2, 4, 5, 64
+    max_blocks = 64 // block_size
+    num_blocks = 2 * b * max_blocks + 1
+    q = jnp.asarray(rng.standard_normal((b, kvh, cq, g, hd)), jnp.float32)
+    k_pool = jnp.asarray(
+        rng.standard_normal((num_blocks, block_size, kvh, hd)), jnp.float32
+    )
+    v_pool = jnp.asarray(
+        rng.standard_normal((num_blocks, block_size, kvh, hd)), jnp.float32
+    )
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, num_blocks))[: b * max_blocks]
+        .reshape(b, max_blocks).astype(np.int32)
+    )
+    pos = jnp.asarray([64 - cq, 17], jnp.int32)  # ragged slot depths
+    got = paged_prefill_attention_pallas(
+        q, k_pool, v_pool, bt, pos, window=window, interpret=True
+    )
+    want = paged_prefill_attention_reference(
+        q, k_pool, v_pool, bt, pos, window=window
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_paged_prefill_attention_null_blocks_unreachable():
+    """Table entries past a slot's allocation are 0 (the null block); the
+    kv_idx <= pos + i mask must keep the null block's garbage out of every
+    valid query's softmax."""
+    rng = np.random.default_rng(17)
+    b, kvh, g, cq, hd, bs, mb = 1, 2, 2, 4, 64, 8, 6
+    num_blocks = 12
+    q = jnp.asarray(rng.standard_normal((b, kvh, cq, g, hd)), jnp.float32)
+    k_pool = jnp.asarray(
+        rng.standard_normal((num_blocks, bs, kvh, hd)), jnp.float32
+    )
+    v_pool = jnp.asarray(
+        rng.standard_normal((num_blocks, bs, kvh, hd)), jnp.float32
+    )
+    # slot holds 2 mapped blocks = 16 positions; the rest of the table is 0
+    bt = jnp.asarray([[3, 7, 0, 0, 0, 0]], jnp.int32)
+    pos = jnp.asarray([16 - cq], jnp.int32)  # chunk fills the mapped span
+    got = paged_prefill_attention_pallas(
+        q, k_pool, v_pool, bt, pos, interpret=True
+    )
+    # oracle over ONLY the mapped prefix: poisoning the null block must not
+    # change the output
+    k_poison = k_pool.at[0].set(1e6)
+    v_poison = v_pool.at[0].set(1e6)
+    want = paged_prefill_attention_reference(q, k_pool, v_pool, bt, pos)
+    got_poison = paged_prefill_attention_pallas(
+        q, k_poison, v_poison, bt, pos, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+    np.testing.assert_allclose(
+        np.asarray(got_poison), np.asarray(got), atol=3e-5
+    )
+
+
+# ---------------------------------------------- trace-count (recompilation)
+def test_attention_ops_trace_once_across_pos_flavors():
+    """Per-tick retrace regression: the public ops normalize ``pos`` (and
+    block-table dtypes) BEFORE the jit boundary, so alternating Python
+    ints, numpy scalars, () arrays and (B,) arrays — what a host serving
+    loop actually passes tick to tick — hits ONE trace-cache entry per
+    tensor shape on the jitted kernels."""
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.prefill_attention.ops import prefill_attention
+
+    rng = np.random.default_rng(5)
+    b, s, kvh, g, cq, hd = 2, 64, 2, 2, 4, 32
+    h = kvh * g
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    q1 = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+    qc = jnp.asarray(rng.standard_normal((b, cq, h, hd)), jnp.float32)
+
+    flavors = [
+        7,  # python int
+        np.int32(9),  # numpy scalar
+        jnp.asarray(11, jnp.int32),  # () device array
+        jnp.asarray([13, 5], jnp.int32),  # (B,) per-slot vector
+        np.asarray([3, 21], np.int64),  # host vector, wrong dtype
+    ]
+    base_dec = decode_attention_pallas._cache_size()
+    base_pre = prefill_attention_pallas._cache_size()
+    for pos in flavors:
+        decode_attention(q1, k, v, pos)
+        prefill_attention(qc, k, v, pos)
+    assert decode_attention_pallas._cache_size() == base_dec + 1
+    assert prefill_attention_pallas._cache_size() == base_pre + 1

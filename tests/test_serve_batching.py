@@ -120,6 +120,50 @@ def test_one_decode_dispatch_per_tick():
         assert batcher.ticks == 3  # max_new=4 => 1 from prefill + 3 ticks
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_serve_step_traces_once(backend):
+    """O(1) dispatches are only real if each dispatch reuses ONE compiled
+    program: varying batch CONTENT tick to tick (tokens, per-slot
+    positions, live mask, prompt lengths, slot reuse) must never retrace
+    the jitted step pair — for the pallas backend that pins the kernels'
+    hoisted static args too (a retrace per tick would recompile the Pallas
+    kernels on every generated token)."""
+    import dataclasses
+
+    cfg = get("olmo_1b", smoke=True)
+    cfg = dataclasses.replace(cfg, attn_backend=backend)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    # max_seq=31 is used by no other test: make_serve_step memoizes on
+    # (model, max_seq, ...), so this step pair's jit cache starts empty
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=31, prefill_chunk=4
+    )
+    for i, (n, mn) in enumerate(((5, 4), (7, 6), (3, 3))):
+        batcher.submit(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+            max_new=mn,
+        ))
+    batcher.run()
+    assert batcher._tick_fn._cache_size() == 1
+    assert batcher._prefill_fn._cache_size() == 1
+    # a second batcher over the same shapes shares the memoized pair and
+    # must add NO new traces, whatever its prompts/lengths
+    batcher2 = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=31, prefill_chunk=4
+    )
+    for i, (n, mn) in enumerate(((8, 3), (2, 7))):
+        batcher2.submit(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+            max_new=mn,
+        ))
+    batcher2.run()
+    assert batcher2._tick_fn is batcher._tick_fn  # memoized step pair
+    assert batcher2._tick_fn._cache_size() == 1
+    assert batcher2._prefill_fn._cache_size() == 1
+
+
 # ------------------------------------------------- per-slot-position decode
 @pytest.mark.parametrize("arch", ["qwen2_5_14b", "deepseek_v2_236b"])
 def test_decode_step_vector_positions_match_scalar(arch):
