@@ -144,6 +144,33 @@ print(f"attn_backend='pallas' (flash decode + chunked flash prefill, "
       f"interpret mode on {jax.default_backend()}) in {dt:.1f}s: outputs "
       f"match the jnp backend: {flash_match}")
 
+# ---- SLA scheduler: chunked prefill-decode interleaving + streaming ----
+# a token-budget scheduler (docs/serving.md) co-schedules prompt chunks
+# with decode in ONE fused dispatch per tick: long prompts can no longer
+# stall decoding slots (head-of-line blocking), tokens stream per tick via
+# on_token, and requests can be cancelled mid-flight
+streamed = []
+sla = ContinuousBatcher(
+    model, params, num_slots=2, max_seq=96, policy="sjf", chunk_budget=8,
+    on_token=lambda r, t: streamed.append((r.uid, t)),
+)
+for i in range(batch):
+    sla.submit(Request(
+        uid=i, tokens=np.asarray(prompts["tokens"][i]), max_new=32,
+        task_id=int(prompts["task_ids"][i]),
+    ))
+sla.step()          # one fused tick: prompt chunks + decode together
+sla.cancel(3)       # mid-flight cancellation frees the slot immediately
+done_sla = sla.run()
+sla_match = all(
+    {r.uid: r.out for r in done_sla}[i] == out[i].tolist() for i in range(3)
+)
+print(f"sjf + chunk_budget=8: {sla.mixed_dispatches} fused "
+      f"prefill+decode dispatches, {len(streamed)} tokens streamed "
+      f"per-tick, request 3 cancelled mid-flight "
+      f"(emitted {len({r.uid: r for r in done_sla}[3].out)} tokens); "
+      f"surviving outputs still match greedy engine: {sla_match}")
+
 # ---- kernel cross-check: serving attention == Pallas flash-decode ----
 # per-slot decode positions, as the vectorized batcher issues them
 b, s, kvh, hd = 2, 256, cfg.num_kv_heads, cfg.head_dim

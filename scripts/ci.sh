@@ -3,11 +3,17 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# scheduler/executor layer once more with the flash kernels driving
+# attention (interpret mode on CPU): chunked interleaving parity,
+# cancellation and timeouts must hold on BOTH backends
+SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_serve_scheduler.py
 # serving benchmark smoke: O(1)-dispatch, engine==batcher parity, paged-cache
-# parity/memory, prefill-mode parity and jnp-vs-pallas backend parity run on
-# every PR (interpret/CPU mode), persisting BENCH_serve.json; then the whole
-# serve loop once more with attn_backend="pallas" so the Pallas kernel path
-# is the one driving decode + prefill, not just the jnp default. The flag
+# parity/memory, prefill-mode parity, jnp-vs-pallas backend parity and the
+# Poisson-trace tail-latency property run on every PR (interpret/CPU mode),
+# persisting BENCH_serve.json (incl. p99 TTFT/ITL); then the whole serve
+# loop once more with attn_backend="pallas" so the Pallas kernel path is
+# the one driving decode + prefill, not just the jnp default. The flag
 # sets live in ONE place — the Makefile targets.
 make bench-smoke
 make bench-smoke-pallas

@@ -1,4 +1,6 @@
 from repro.serve.engine import generate, ServeEngine
-from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.batching import ContinuousBatcher, Request, TickBudgetExceeded
+from repro.serve.scheduler import Scheduler, POLICIES
+from repro.serve.slots import SlotMap
 from repro.serve.paging import BlockAllocator, PagingSpec
 from repro.serve.step import make_serve_step

@@ -1,51 +1,50 @@
-"""Continuous batching for the serving path — vectorized per-slot-position
-decode over dense OR paged (block-table) KV caches.
+"""Serving executor: wires scheduler decisions into the jitted step pair.
 
-A fixed pool of decode slots; requests join as slots free up and each slot
-tracks its own position. One jitted dispatch per tick advances EVERY live
-slot one token at its own position (``model.decode_step`` takes a (B,)
-position vector and a (B,) live mask): decode cost is O(1) dispatches in the
-slot count, the vLLM/TGI-style scheduling loop this system needs before
-multi-host serving.
+``ContinuousBatcher`` is the EXECUTOR layer of the serving core (see
+``docs/serving.md`` for the full picture):
 
-Design (shared with ``ServeEngine`` via ``repro.serve.step`` so the two
-serving paths cannot drift):
+  * ``repro.serve.slots.SlotMap``  — pure slot/position/live bookkeeping,
+  * ``repro.serve.scheduler.Scheduler`` — queue, admission policies
+    (fifo/sjf/priority), the Sarathi-style per-tick prefill token budget,
+    deadlines and cancellation decisions,
+  * this module — the only layer that touches device state: the cache
+    pytree, the ``BlockAllocator`` + block tables (paged mode), and the two
+    jitted callables from ``repro.serve.step``.
 
-  * decode — ``tick()`` issues exactly one jitted dispatch regardless of
-    ``num_slots``; dead slots ride along on a padding token with their
-    KV/recurrent state frozen by the model's masked writes.
-  * prefill — admission writes whole (num_slots, C) prompt slices per
-    dispatch (ceil(max_prompt_len / C) dispatches per admission round, all
-    newly admitted slots prefilled together), with per-token validity masks
-    for heterogeneous prompt lengths. Each chunk's C tokens are computed IN
-    PARALLEL by ``model.prefill_step`` (``prefill_mode="scan"`` selects the
-    per-token oracle instead — see ``repro.serve.step``).
-  * multimodal — VLM (pixtral-style) requests carry their vision embeds +
-    mask in ``Request.extras``; admission slices them into the prefill
-    dispatch alongside the tokens (they used to be dropped silently).
-  * slot reuse — re-admission restores the slot's per-slot state to the
-    pristine ``init_cache`` value inside the prefill dispatch (recurrent
-    SSM/xLSTM states are cumulative and MUST be cleared; the mLSTM
-    stabilizer resets to -inf, not 0).
-  * multi-task — each request carries a ``task_id``; heterogeneous tasks
-    share a tick and pick up their own personalization (the paper's
-    graph-mixed per-task parameters) through the model's task embedding
-    lookups.
+Two execution regimes, selected by ``chunk_budget``:
 
-Paged mode (pass a ``repro.serve.paging.PagingSpec``): attention caches are
-a shared per-layer block pool instead of per-slot ``max_seq`` stripes, so
-KV memory scales with the POOL size, not ``num_slots x max_seq`` — the
-prerequisite for slot counts >> memory-per-slot. The batcher owns the
-host-side ``BlockAllocator``: admission reserves ``ceil((len(prompt) +
-max_new) / block_size)`` blocks for the whole request lifetime (a request
-that cannot get them WAITS in the queue — admission backpressure, no
-mid-flight OOM) and ``_finish_ready`` returns them to the free list. Block
-tables ride along with every jitted dispatch; freed blocks are recycled
-without clearing (see ``repro.serve.paging`` for the invariants).
+  * ``chunk_budget=None`` (default) — admission prefills whole prompts
+    immediately (chunked (num_slots, C) dispatches), then one jitted decode
+    dispatch per tick advances every live slot. With ``policy="fifo"`` this
+    is token-for-token the pre-scheduler behavior: the refactor's parity
+    oracle, pinned by the serving tests and benchmark.
+  * ``chunk_budget=N`` — SLA mode: every tick issues ONE fused prefill
+    dispatch in which decoding slots advance one token each AND mid-prompt
+    slots prefill at most N prompt tokens (policy-ordered), all in the same
+    (num_slots, C) slab under per-row validity masks. A long prompt can no
+    longer stall decoding slots for its whole prefill (head-of-line
+    blocking): each tick bounds prefill work by N. ``model.prefill_step``
+    with a single valid token is numerically the decode step (pinned by the
+    chunk-width-invariance parity tests), so only latency changes, never
+    tokens.
 
-``decode_dispatches`` / ``prefill_dispatches`` / ``ticks`` count real jitted
-calls so tests and ``benchmarks/serve_throughput.py`` can assert the O(1)
-dispatch property.
+Emission hooks: ``on_token(request, token)`` streams every generated token
+the tick it is produced; ``sample_fn(request, logits_row)`` replaces greedy
+argmax (``ServeEngine`` uses it for temperature sampling keyed by request
+id). Requests can be cancelled mid-flight (``cancel(uid)``) or expire via
+``Request.timeout_s`` — both free the slot and its paged blocks
+immediately and are returned in ``finished`` with ``cancelled`` /
+``timed_out`` set and ``done`` False.
+
+Paged mode (pass a ``repro.serve.paging.PagingSpec``): admission reserves
+``ceil((len(prompt) + max_new) / block_size)`` blocks for the request
+lifetime (allocator backpressure queues requests that cannot get them) and
+every retirement path — finish, cancel, timeout — returns them.
+
+``decode_dispatches`` / ``prefill_dispatches`` / ``mixed_dispatches`` /
+``ticks`` count real jitted calls so tests and
+``benchmarks/serve_throughput.py`` can assert the O(1)-dispatch property
+in both regimes.
 """
 from __future__ import annotations
 
@@ -56,19 +55,34 @@ import numpy as np
 
 from repro.models.model import TransformerLM
 from repro.serve.paging import BlockAllocator, PagingSpec
+from repro.serve.scheduler import Scheduler
+from repro.serve.slots import SlotMap
 from repro.serve.step import make_serve_step
+
+
+class TickBudgetExceeded(RuntimeError):
+    """``run(max_ticks)`` spent its budget with requests still unfinished.
+
+    The unfinished requests are flagged ``timed_out`` and remain queued /
+    in-flight; pass ``on_exhausted="flag"`` to get partial results back
+    instead of this exception."""
 
 
 @dataclasses.dataclass
 class Request:
     uid: int
-    tokens: np.ndarray  # (S0,) prompt
+    tokens: np.ndarray  # (S0,) prompt — or (S0, K) for audio codebooks
     max_new: int
     task_id: int = 0
     # per-request model extras, aligned with the prompt: VLM requests carry
     # {"vision_embeds": (S0, d_model) float32, "vision_mask": (S0,) bool}.
     # None means a pure-text prompt (zero embeds, False mask).
     extras: dict | None = None
+    # scheduling: lower priority value runs first under policy="priority"
+    # (nice-style); timeout_s expires the request that many seconds after
+    # submit() — queued OR mid-flight — freeing its slot and paged blocks.
+    priority: int = 0
+    timeout_s: float | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     # finished before emitting max_new tokens (slot capacity hit). submit()
@@ -76,10 +90,23 @@ class Request:
     # for every request admitted through the public API — it exists so a
     # capacity-clipped finish can never again masquerade as a completed one.
     truncated: bool = False
+    # retirement flags: cancel(uid) / deadline expiry / run() tick-budget
+    # exhaustion. A flagged request is NEVER done — callers cannot mistake
+    # a truncated run for completion.
+    cancelled: bool = False
+    timed_out: bool = False
+    # bookkeeping stamped by the scheduler/executor
+    submit_time: float | None = None
+    prompt_done: int = 0  # prompt tokens already written to the cache
+    _arrival: int = 0
+
+    @property
+    def prefill_remaining(self) -> int:
+        return len(self.tokens) - self.prompt_done
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching engine (one dispatch per tick)."""
+    """Slot-based continuous batching executor (one dispatch per tick)."""
 
     def __init__(
         self,
@@ -90,6 +117,12 @@ class ContinuousBatcher:
         prefill_chunk: int = 16,
         paging: PagingSpec | None = None,
         prefill_mode: str = "parallel",
+        policy: str = "fifo",
+        chunk_budget: int | None = None,
+        scheduler: Scheduler | None = None,
+        now_fn=None,
+        on_token=None,
+        sample_fn=None,
     ):
         self.model = model
         self.params = params
@@ -98,6 +131,12 @@ class ContinuousBatcher:
         self.prefill_chunk = prefill_chunk
         self.paging = paging
         self.prefill_mode = prefill_mode
+        self.on_token = on_token
+        self.sample_fn = sample_fn
+        self.scheduler = scheduler if scheduler is not None else Scheduler(
+            policy=policy, chunk_budget=chunk_budget, now_fn=now_fn
+        )
+        self.slots = SlotMap(num_slots)
         if paging is not None:
             # a slot's logical length is bounded by BOTH max_seq and its
             # block-table capacity
@@ -110,16 +149,29 @@ class ContinuousBatcher:
         else:
             self.slot_capacity = max_seq
         self.caches = model.init_cache(num_slots, max_seq, paging)
-        self.pos = np.zeros(num_slots, np.int32)  # next write position
-        self.active: list[Request | None] = [None] * num_slots
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.ticks = 0
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+        self.mixed_dispatches = 0  # fused prefill+decode (chunk_budget mode)
         self._tick_fn, self._prefill_fn = make_serve_step(
             model, max_seq, paging, prefill_mode
         )
+
+    # --------------------------------------------------- bookkeeping views
+    # (the structures live in the scheduler/slot-map layers; these views
+    # keep the executor's public surface stable)
+    @property
+    def queue(self) -> list[Request]:
+        return self.scheduler.queue
+
+    @property
+    def active(self) -> list[Request | None]:
+        return self.slots.reqs
+
+    @property
+    def pos(self) -> np.ndarray:
+        return self.slots.pos
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: Request):
@@ -160,7 +212,7 @@ class ContinuousBatcher:
                     "blocks — it could never be admitted"
                 )
         self._validate_extras(req, n)
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
     def _validate_extras(self, req: Request, n: int):
         """Per-request extras must be usable by the prefill dispatch.
@@ -194,11 +246,6 @@ class ContinuousBatcher:
                 f"vision_mask ({n},), got {emb.shape} and {msk.shape}"
             )
 
-    def _task_ids(self) -> np.ndarray:
-        return np.array(
-            [r.task_id if r else 0 for r in self.active], np.int32
-        )
-
     def _block_tables(self):
         return (
             jnp.asarray(self.block_tables) if self.paging is not None else None
@@ -210,10 +257,37 @@ class ContinuousBatcher:
             self.slot_blocks[s] = []
             self.block_tables[s, :] = 0
 
+    def _try_bind(self, s: int, req: Request) -> bool:
+        """Scheduler placement callback: reserve the request's blocks for
+        its whole lifetime and bind the slot — or report backpressure."""
+        if self.paging is not None:
+            needed = self.paging.blocks_for(len(req.tokens) + req.max_new)
+            if not self.allocator.can_alloc(needed):
+                return False  # wait for finishing requests to free blocks
+            blocks = self.allocator.alloc(needed)
+            self.slot_blocks[s] = blocks
+            self.block_tables[s, :] = 0
+            self.block_tables[s, : len(blocks)] = blocks
+        self.slots.bind(s, req)
+        return True
+
+    # ------------------------------------------------------------- emission
+    def _emit(self, req: Request, row=None, greedy=None):
+        """Append one generated token (greedy argmax, the decode dispatch's
+        in-jit argmax, or the pluggable sampler) and stream it."""
+        if self.sample_fn is not None:
+            tok = self.sample_fn(req, row)
+        elif greedy is not None:
+            tok = greedy
+        else:
+            tok = np.argmax(row, axis=-1)
+        tok = int(tok) if np.ndim(tok) == 0 else np.asarray(tok, np.int32)
+        req.out.append(tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
     def _finish_ready(self):
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
+        for s, req in self.slots.live_items():
             # capacity guard: pos is the NEXT write position, so the slot is
             # exhausted only when pos == capacity (position capacity - 1 is
             # writable; the old `>= capacity - 1` guard wasted the last
@@ -224,40 +298,74 @@ class ContinuousBatcher:
                 # finished at the capacity guard, not by request completion
                 req.truncated = len(req.out) < req.max_new
                 self.finished.append(req)
-                self.active[s] = None  # state cleared on re-admission
+                self.slots.release(s)  # state cleared on re-admission
                 self._free_slot_blocks(s)
 
+    # --------------------------------------------------- retirement paths
+    def cancel(self, uid) -> bool:
+        """Cancel a request by uid, queued or mid-flight. Frees its slot
+        and paged blocks immediately; the request lands in ``finished``
+        with ``cancelled=True`` and never emits another token. Returns
+        False if no such request is queued or in flight."""
+        req = self.scheduler.cancel(uid)
+        if req is None:
+            s = self.slots.slot_of(uid)
+            if s is None:
+                return False
+            req = self.slots.release(s)
+            self._free_slot_blocks(s)
+        req.cancelled = True
+        self.finished.append(req)
+        return True
+
+    def _retire_expired(self):
+        """Release requests past their ``timeout_s`` deadline — queued or
+        mid-flight — freeing slots and paged blocks."""
+        if not any(
+            r.timeout_s is not None
+            for r in self.scheduler.queue + self.slots.reqs
+            if r is not None
+        ):
+            return
+        dead_queued, dead_live = self.scheduler.expired(
+            self.scheduler.now(), self.slots.live_items()
+        )
+        for req in dead_queued:
+            req.timed_out = True
+            self.finished.append(req)
+        for s, req in dead_live:
+            self.slots.release(s)
+            self._free_slot_blocks(s)
+            req.timed_out = True
+            self.finished.append(req)
+
+    # ------------------------------------------------- legacy (gulp) prefill
     def _admit(self):
-        """Fill free slots from the queue, then prefill ALL newly admitted
-        prompts together in chunked dispatches (whole (num_slots, C) slices
-        per dispatch, per-token validity for unequal prompt lengths).
+        """Fill free slots in scheduler policy order, then (unchunked mode)
+        prefill ALL newly admitted prompts together in chunked dispatches
+        (whole (num_slots, C) slices per dispatch, per-token validity for
+        unequal prompt lengths).
 
         Paged mode reserves each request's blocks here, for its whole
-        lifetime; when the free list cannot cover the queue head, admission
-        stops (FIFO backpressure) until finishing requests release blocks."""
-        newly = []
-        for s in range(self.num_slots):
-            if self.active[s] is None and self.queue:
-                if self.paging is not None:
-                    head = self.queue[0]
-                    needed = self.paging.blocks_for(
-                        len(head.tokens) + head.max_new
-                    )
-                    if not self.allocator.can_alloc(needed):
-                        break  # backpressure: wait for finishes to free blocks
-                    blocks = self.allocator.alloc(needed)
-                    self.slot_blocks[s] = blocks
-                    self.block_tables[s, :] = 0
-                    self.block_tables[s, : len(blocks)] = blocks
-                self.active[s] = self.queue.pop(0)
-                self.pos[s] = 0
-                newly.append(s)
-        if not newly:
-            return
-        task_ids = jnp.asarray(self._task_ids())
+        lifetime; when the free list cannot cover the policy head,
+        admission stops (backpressure) until finishing requests release
+        blocks."""
+        admitted = self.scheduler.admit(self.slots.free_slots(), self._try_bind)
+        if not admitted:
+            return []
+        newly = [s for s, _ in admitted]
+        if self.scheduler.chunk_budget is None:
+            self._prefill_full(newly)
+        return newly
+
+    def _prefill_full(self, newly: list[int]):
+        """The pre-scheduler admission gulp: run every newly admitted
+        prompt to completion in ceil(max_prompt_len / C) dispatches and
+        emit each request's first generated token."""
+        task_ids = jnp.asarray(self.slots.task_ids())
         reset = np.zeros(self.num_slots, bool)
         reset[newly] = True
-        maxlen = max(len(self.active[s].tokens) for s in newly)
+        maxlen = max(len(self.slots.reqs[s].tokens) for s in newly)
         c = self.prefill_chunk
         vlm = self.model.cfg.input_mode == "vlm"
         first_logits = np.zeros(self.num_slots, object)
@@ -270,7 +378,7 @@ class ContinuousBatcher:
                                np.float32)
                 msk = np.zeros((self.num_slots, c), bool)
             for s in newly:
-                req = self.active[s]
+                req = self.slots.reqs[s]
                 t = np.asarray(req.tokens, np.int32)[c0 : c0 + c]
                 tokens[s, : len(t)] = t
                 valid[s, : len(t)] = True
@@ -292,52 +400,182 @@ class ContinuousBatcher:
                 jnp.asarray(reset), extras, self._block_tables(),
             )
             self.prefill_dispatches += 1
-            self.pos = np.asarray(positions)
+            self.slots.set_positions(positions)
             reset = np.zeros(self.num_slots, bool)
             last_np = np.asarray(last)
             for s in newly:
                 if valid[s].any():  # prompt reached into this chunk
                     first_logits[s] = last_np[s]
         # the logits after each prompt's LAST token are the first generated
-        # token — emit them (greedy), exactly like the engine's prefill.
-        # submit() rejects empty prompts, so every admitted slot has real
-        # last-token logits here.
+        # token — emit them, exactly like the engine's prefill. submit()
+        # rejects empty prompts, so every admitted slot has real last-token
+        # logits here.
         for s in newly:
-            self.active[s].out.append(int(np.argmax(first_logits[s])))
+            req = self.slots.reqs[s]
+            if req is None:  # cancelled from a streaming callback mid-round
+                continue
+            req.prompt_done = len(req.tokens)
+            self._emit(req, row=first_logits[s])
 
     def tick(self):
         """Advance every live slot one token — exactly ONE jitted dispatch
         regardless of how many slots are live or at which positions."""
-        live = np.array([r is not None for r in self.active])
+        live = self.slots.live()
         if not live.any():
             return
-        tokens = np.zeros(self.num_slots, np.int32)
-        for s, req in enumerate(self.active):
-            if req is not None:
-                tokens[s] = req.out[-1] if req.out else int(req.tokens[-1])
-        next_tok, _, self.caches = self._tick_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(self._task_ids()),
+        cb = self.model.cfg.num_codebooks
+        shape = (self.num_slots,) if cb <= 1 else (self.num_slots, cb)
+        tokens = np.zeros(shape, np.int32)
+        for s, req in self.slots.live_items():
+            tokens[s] = (
+                req.out[-1] if req.out else np.asarray(req.tokens)[-1]
+            )
+        next_tok, step_logits, self.caches = self._tick_fn(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.slots.task_ids()),
             self.caches, jnp.asarray(self.pos), jnp.asarray(live),
             self._block_tables(),
         )
         self.ticks += 1
         self.decode_dispatches += 1
-        self.pos = self.pos + live.astype(np.int32)
+        self.slots.advance_live()
         next_np = np.asarray(next_tok)
-        for s, req in enumerate(self.active):
-            if req is not None:
-                req.out.append(int(next_np[s]))
+        logits_np = (
+            np.asarray(step_logits) if self.sample_fn is not None else None
+        )
+        for s, req in self.slots.live_items():
+            row = logits_np[s] if logits_np is not None else None
+            self._emit(req, row=row, greedy=next_np[s])
 
-    def run(self, max_ticks: int = 10_000):
-        """Drive until all submitted requests finish (or this call has spent
-        ``max_ticks`` ticks — the budget is per call, not lifetime)."""
-        start = self.ticks
-        while self.queue or any(r is not None for r in self.active):
-            self._admit()
+    # ------------------------------------- SLA mode: fused prefill + decode
+    def _interleaved_tick(self):
+        """ONE fused dispatch: decoding slots advance one token AND
+        mid-prompt slots prefill their scheduler-budgeted chunk, riding the
+        same (num_slots, C) slab under per-row validity. Decode rows are a
+        single-valid-token chunk, numerically the decode step."""
+        prefilling = [
+            (s, r, r.prefill_remaining)
+            for s, r in self.slots.live_items()
+            if r.prefill_remaining > 0
+        ]
+        decoding = [
+            (s, r) for s, r in self.slots.live_items()
+            if r.prefill_remaining == 0
+        ]
+        if not prefilling and not decoding:
+            return
+        c = self.prefill_chunk
+        plan = self.scheduler.plan_prefill(prefilling, c)
+        cfg = self.model.cfg
+        cb = cfg.num_codebooks
+        tok_shape = (
+            (self.num_slots, c) if cb <= 1 else (self.num_slots, c, cb)
+        )
+        tokens = np.zeros(tok_shape, np.int32)
+        valid = np.zeros((self.num_slots, c), bool)
+        reset = np.zeros(self.num_slots, bool)
+        vlm = cfg.input_mode == "vlm"
+        if vlm:
+            emb = np.zeros((self.num_slots, c, cfg.d_model), np.float32)
+            msk = np.zeros((self.num_slots, c), bool)
+        for s, n in plan:
+            req = self.slots.reqs[s]
+            d = req.prompt_done
+            tokens[s, :n] = np.asarray(req.tokens, np.int32)[d : d + n]
+            valid[s, :n] = True
+            reset[s] = d == 0
+            if vlm and req.extras is not None:
+                emb[s, :n] = np.asarray(
+                    req.extras["vision_embeds"], np.float32
+                )[d : d + n]
+                msk[s, :n] = np.asarray(req.extras["vision_mask"], bool)[d : d + n]
+        for s, req in decoding:
+            tokens[s, 0] = (
+                req.out[-1] if req.out else np.asarray(req.tokens)[-1]
+            )
+            valid[s, 0] = True
+        extras = {}
+        if vlm:
+            extras = {
+                "vision_embeds": jnp.asarray(emb),
+                "vision_mask": jnp.asarray(msk),
+            }
+        last, self.caches, positions = self._prefill_fn(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.slots.task_ids()), self.caches,
+            jnp.asarray(self.pos), jnp.asarray(valid), jnp.asarray(reset),
+            extras, self._block_tables(),
+        )
+        self.ticks += 1
+        self.mixed_dispatches += 1
+        self.slots.set_positions(positions)
+        last_np = np.asarray(last)
+        for s, n in plan:
+            req = self.slots.reqs[s]
+            if req is None:  # cancelled from a streaming callback mid-round
+                continue
+            req.prompt_done += n
+            if req.prefill_remaining == 0:
+                self._emit(req, row=last_np[s])  # first generated token
+        for s, req in decoding:
+            if self.slots.reqs[s] is not req:  # cancelled mid-round
+                continue
+            self._emit(req, row=last_np[s])
+
+    # ------------------------------------------------------------ driving
+    def step(self):
+        """One scheduling round: retire expired requests, admit from the
+        queue, then advance — the legacy admit-gulp + decode tick when
+        ``chunk_budget`` is None, or one fused interleaved dispatch."""
+        self._retire_expired()
+        self._admit()
+        if self.scheduler.chunk_budget is None:
             self._finish_ready()  # prefill alone may satisfy max_new
-            if any(r is not None for r in self.active):
-                if self.ticks - start >= max_ticks:
-                    break
+            if self.slots.any_live():
                 self.tick()
-                self._finish_ready()
+        else:
+            self._interleaved_tick()
+        self._finish_ready()
+
+    def _pending(self) -> bool:
+        return bool(self.scheduler.queue) or self.slots.any_live()
+
+    def run(self, max_ticks: int = 10_000, on_exhausted: str = "raise"):
+        """Drive until all submitted requests finish (or this call has spent
+        ``max_ticks`` ticks — the budget is per call, not lifetime).
+
+        An exhausted budget with unfinished requests used to return
+        silently, indistinguishable from completion. Now every unfinished
+        request (queued or mid-flight) is flagged ``timed_out``, and
+        ``on_exhausted`` picks the contract: ``"raise"`` (default) raises
+        ``TickBudgetExceeded``; ``"flag"`` returns the finished list with
+        the stragglers left in place for a later ``run`` call."""
+        if on_exhausted not in ("raise", "flag"):
+            raise ValueError(
+                f"on_exhausted must be 'raise' or 'flag', got {on_exhausted!r}"
+            )
+        start = self.ticks
+        exhausted = False
+        while self._pending():
+            if self.ticks - start >= max_ticks:
+                # only work that needs dispatches counts as exhaustion —
+                # a queue drained by retirement below is not
+                self._retire_expired()
+                if self._pending():
+                    exhausted = True
+                break
+            self.step()
+        if exhausted:
+            unfinished = [r for _, r in self.slots.live_items()]
+            unfinished += list(self.scheduler.queue)
+            for r in unfinished:
+                r.timed_out = True
+            if on_exhausted == "raise":
+                raise TickBudgetExceeded(
+                    f"run(max_ticks={max_ticks}) exhausted its tick budget "
+                    f"with {len(unfinished)} unfinished request(s) "
+                    f"(uids {[r.uid for r in unfinished]}); they are flagged "
+                    "Request.timed_out — pass on_exhausted='flag' to get "
+                    "partial results instead of this exception"
+                )
         return self.finished

@@ -1,19 +1,33 @@
-"""Batched serving: chunked prefill + greedy/temperature decode, delegating
-to the shared vectorized step in ``repro.serve.step``.
+"""Batched serving: a uniform-batch client of the layered serving core.
 
-``ServeEngine`` drives the SAME jitted (prefill_chunk, decode_tick) pair the
-continuous batcher uses — one decode dispatch per generated token for the
-whole batch, ceil(S0 / prefill_chunk) dispatches for the prompt — so greedy
-output is token-for-token identical between the two serving paths.
-``generate`` is the convenience wrapper used by the examples and the serving
-benchmark.
+``ServeEngine.generate`` is the convenience front-end used by the examples,
+the runners and the serving benchmark: it takes a (B, S0) prompt batch and
+returns (B, num_tokens[, K]) generated ids. Since the scheduler/executor
+split it no longer drives the jitted step pair itself — each call builds a
+B-slot ``ContinuousBatcher`` (FIFO, unchunked: the parity-oracle
+configuration) and submits one ``Request`` per row, so there is exactly ONE
+serving code path: admission gulps the whole prompt batch in chunked
+(B, prefill_chunk) dispatches, then one decode dispatch per generated
+token. ``make_serve_step`` memoizes the jitted pair on
+(model, max_seq, paging, prefill_mode), so per-call batchers cost no
+recompiles.
+
+Sampling (``temperature > 0``) draws each request's tokens from keys
+derived from the REQUEST ID, not the batch position:
+``fold_in(fold_in(key, uid), token_index)``. A request's sampled stream is
+a pure function of (key, uid, its own logits) — stable under scheduler
+reordering, batch composition, and slot placement. Pass ``request_ids``
+to name the rows (defaults to ``range(B)``).
+
+``on_token(uid, token)`` streams every generated token the tick it is
+produced, before the full batch finishes.
 
 Pass ``paging`` (a ``repro.serve.paging.PagingSpec``) to serve from the
-paged block-pool cache layout: the engine's uniform batch maps to a trivial
-block-table assignment (request i owns ``blocks_for(S0 + num_tokens)``
-consecutive blocks), which makes it the dense-vs-paged parity oracle for the
-batcher's allocator-driven tables — the table CONTENTS differ, the gathered
-logical views do not.
+paged block-pool cache layout: the allocator hands the uniform batch the
+same contiguous ascending block tables the old dedicated path computed
+(request i owns ``blocks_for(S0 + num_tokens)`` consecutive blocks), which
+keeps the engine the dense-vs-paged parity oracle for allocator-driven
+tables.
 """
 from __future__ import annotations
 
@@ -25,14 +39,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
+from repro.serve.batching import ContinuousBatcher, Request
 from repro.serve.paging import PagingSpec
-from repro.serve.step import make_serve_step
 
 
 def _sample(logits, key, temperature: float):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     return jax.random.categorical(key, logits / temperature)
+
+
+def _request_key(base_key, uid: int, token_index: int):
+    """Per-draw PRNG key: a pure function of (base key, request id, token
+    index) — independent of batch position and scheduling order."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, uid), token_index)
 
 
 @dataclasses.dataclass
@@ -46,85 +66,21 @@ class ServeEngine:
     # per-token oracle) — see repro.serve.step.make_serve_step
     prefill_mode: str = "parallel"
 
-    def __post_init__(self):
-        self._tick, self._prefill = make_serve_step(
-            self.model, self.max_seq, self.paging, self.prefill_mode
-        )
-
-    def _assign_block_tables(self, b: int, total_tokens: int):
-        """Uniform-batch block tables: request i owns consecutive physical
-        blocks (ids start at 1 — block 0 is the reserved null block)."""
-        spec = self.paging
-        needed = spec.blocks_for(total_tokens)
-        if needed > spec.max_blocks_per_slot:
-            raise ValueError(
-                f"{total_tokens} tokens need {needed} blocks > "
-                f"max_blocks_per_slot={spec.max_blocks_per_slot}"
-            )
-        if 1 + b * needed > spec.num_blocks:
-            raise ValueError(
-                f"batch of {b} x {needed} blocks exceeds the pool "
-                f"({spec.num_blocks - 1} allocatable blocks)"
-            )
-        tables = np.zeros((b, spec.max_blocks_per_slot), np.int32)
-        for i in range(b):
-            tables[i, :needed] = np.arange(
-                1 + i * needed, 1 + (i + 1) * needed
-            )
-        return jnp.asarray(tables)
-
-    def _prefill_prompt(self, prompt_batch, task_ids, block_tables):
-        """Chunked prefill: ceil(S0 / prefill_chunk) dispatches, each writing
-        a whole (B, C) prompt slice. Returns (last-token logits, caches,
-        positions)."""
-        cfg = self.model.cfg
-        toks = jnp.asarray(prompt_batch["tokens"])
-        b, s0 = toks.shape[:2]
-        caches = self.model.init_cache(b, self.max_seq, self.paging)
-        positions = jnp.zeros(b, jnp.int32)
-        reset = jnp.ones(b, bool)  # fresh caches; reset is a no-op but keeps
-        # the dispatch identical to the batcher's admission path
-        # fixed chunk width: one stable (b, chunk) jit shape for all prompt
-        # lengths (short prompts/tails ride on the validity mask)
-        chunk = self.prefill_chunk
-        last = None
-        for c0 in range(0, s0, chunk):
-            n = min(chunk, s0 - c0)
-            pad = chunk - n
-
-            def slab(t):
-                t = t[:, c0 : c0 + n]
-                if pad:
-                    t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
-                return t
-
-            chunk_toks = slab(toks)
-            valid = jnp.pad(jnp.ones((b, n), bool), ((0, 0), (0, pad)))
-            extras = {}
-            if cfg.input_mode == "vlm":
-                extras = {
-                    "vision_embeds": slab(jnp.asarray(prompt_batch["vision_embeds"])),
-                    "vision_mask": slab(jnp.asarray(prompt_batch["vision_mask"])),
-                }
-            last, caches, positions = self._prefill(
-                self.params, chunk_toks, task_ids, caches, positions,
-                valid, reset, extras, block_tables,
-            )
-            reset = jnp.zeros(b, bool)
-        return last, caches, positions
-
     def generate(
         self,
         prompt_batch: dict,
         num_tokens: int,
         key=None,
         temperature: float = 0.0,
+        request_ids=None,
+        on_token=None,
     ) -> np.ndarray:
         """prompt_batch: model inputs with (B, S0) tokens. Returns the
         generated token ids (B, num_tokens[, K])."""
         if key is None:
             key = jax.random.PRNGKey(0)
-        b, s0 = prompt_batch["tokens"].shape[:2]
+        toks = np.asarray(prompt_batch["tokens"])
+        b, s0 = toks.shape[:2]
         if s0 + num_tokens > self.max_seq:
             raise ValueError(
                 f"prompt ({s0}) + num_tokens ({num_tokens}) = "
@@ -132,34 +88,52 @@ class ServeEngine:
                 f"max_seq={self.max_seq}; the generation would be silently "
                 "truncated"
             )
-        block_tables = None
-        if self.paging is not None:
-            block_tables = self._assign_block_tables(b, s0 + num_tokens)
-        task_ids = jnp.asarray(
-            prompt_batch.get("task_ids", jnp.zeros(b, jnp.int32))
-        )
-        logits, caches, positions = self._prefill_prompt(
-            prompt_batch, task_ids, block_tables
-        )
-        live = jnp.ones(b, bool)
-        outs = []
-        # the first sampled token gets its own subkey — reusing `key` here
-        # and then splitting it again below would correlate the first draw
-        # with every subsequent one
-        key, sub = jax.random.split(key)
-        tok = _sample(logits, sub, temperature)
-        for i in range(num_tokens):
-            outs.append(np.asarray(tok))
-            if i + 1 == num_tokens:
-                break  # the last token needs no successor: skip the dispatch
-            key, sub = jax.random.split(key)
-            greedy, logits, caches = self._tick(
-                self.params, tok.astype(jnp.int32), task_ids, caches,
-                positions, live, block_tables,
+        uids = list(request_ids) if request_ids is not None else list(range(b))
+        if len(uids) != b or len(set(uids)) != b:
+            raise ValueError(
+                f"request_ids must be {b} distinct ids, got {uids!r}"
             )
-            positions = positions + 1
-            tok = greedy if temperature <= 0.0 else _sample(logits, sub, temperature)
-        return np.stack(outs, axis=1)
+        task_ids = np.asarray(
+            prompt_batch.get("task_ids", np.zeros(b, np.int32)), np.int32
+        )
+
+        sample_fn = None
+        if temperature > 0.0:
+            def sample_fn(req, row):
+                k = _request_key(key, req.uid, len(req.out))
+                return np.asarray(_sample(jnp.asarray(row), k, temperature))
+
+        stream = None
+        if on_token is not None:
+            def stream(req, tok):
+                on_token(req.uid, tok)
+
+        batcher = ContinuousBatcher(
+            self.model, self.params, num_slots=b, max_seq=self.max_seq,
+            prefill_chunk=self.prefill_chunk, paging=self.paging,
+            prefill_mode=self.prefill_mode, on_token=stream,
+            sample_fn=sample_fn,
+        )
+        vlm = self.model.cfg.input_mode == "vlm"
+        for i, uid in enumerate(uids):
+            extras = None
+            if vlm and "vision_embeds" in prompt_batch:
+                extras = {
+                    "vision_embeds": np.asarray(
+                        prompt_batch["vision_embeds"][i], np.float32
+                    ),
+                    "vision_mask": np.asarray(
+                        prompt_batch["vision_mask"][i], bool
+                    ),
+                }
+            batcher.submit(Request(
+                uid=uid, tokens=toks[i], max_new=num_tokens,
+                task_id=int(task_ids[i]), extras=extras,
+            ))
+        finished = {r.uid: r for r in batcher.run()}
+        return np.stack(
+            [np.asarray(finished[uid].out, np.int32) for uid in uids]
+        )
 
 
 def generate(model, params, prompt_batch, num_tokens, max_seq, **kw) -> np.ndarray:

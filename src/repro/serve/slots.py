@@ -1,0 +1,87 @@
+"""SlotMap: pure host-side slot/position/live-mask bookkeeping.
+
+This is the bottom layer of the serving core (see ``docs/serving.md``):
+which request occupies which decode slot, each slot's next write position,
+and the masks/vectors the jitted steps consume. It holds NO device arrays
+and knows nothing about KV layout, paging, or the model — that separation
+is deliberate: a multi-host serving tier shards the *device* state (cache
+pools, block pools) across hosts while slot bookkeeping stays a cheap
+host-local structure, so the scheduler/executor layers above can be reused
+unchanged per shard (ROADMAP item 1).
+
+The executor (``ContinuousBatcher``) owns the device side: caches, block
+allocator, block tables, and the jitted step pair. The scheduler decides
+*what* runs each tick; the SlotMap only records *where* it runs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SlotMap:
+    """Slot ↔ request binding plus per-slot positions, all host-side.
+
+    ``pos[s]`` is slot ``s``'s NEXT write position (the number of tokens —
+    prompt + generated — already written to its cache). A slot with no
+    bound request keeps ``pos`` at its last value until rebound; ``bind``
+    zeroes it, and the executor's reset flag restores the per-slot cache
+    state inside the next prefill dispatch.
+    """
+
+    def __init__(self, num_slots: int):
+        assert num_slots > 0
+        self.num_slots = num_slots
+        self.pos = np.zeros(num_slots, np.int32)
+        self.reqs: list = [None] * num_slots
+
+    # ------------------------------------------------------------ queries
+    def free_slots(self) -> list[int]:
+        """Ascending ids of unbound slots (deterministic admission order)."""
+        return [s for s, r in enumerate(self.reqs) if r is None]
+
+    def live(self) -> np.ndarray:
+        """(num_slots,) bool — True where a request is bound."""
+        return np.array([r is not None for r in self.reqs])
+
+    def any_live(self) -> bool:
+        return any(r is not None for r in self.reqs)
+
+    def live_items(self):
+        """[(slot, request)] for every bound slot, in slot order."""
+        return [(s, r) for s, r in enumerate(self.reqs) if r is not None]
+
+    def task_ids(self) -> np.ndarray:
+        """(num_slots,) int32 task ids; unbound slots ride along as task 0."""
+        return np.array(
+            [r.task_id if r is not None else 0 for r in self.reqs], np.int32
+        )
+
+    def slot_of(self, uid) -> int | None:
+        """Slot currently bound to request ``uid`` (None if not bound)."""
+        for s, r in enumerate(self.reqs):
+            if r is not None and r.uid == uid:
+                return s
+        return None
+
+    # ------------------------------------------------------------ updates
+    def bind(self, slot: int, req) -> None:
+        assert self.reqs[slot] is None, f"slot {slot} already bound"
+        self.reqs[slot] = req
+        self.pos[slot] = 0
+
+    def release(self, slot: int):
+        """Unbind and return the slot's request (position left as-is — the
+        next ``bind`` zeroes it and the reset flag clears cache state)."""
+        req = self.reqs[slot]
+        assert req is not None, f"slot {slot} is not bound"
+        self.reqs[slot] = None
+        return req
+
+    def set_positions(self, positions) -> None:
+        """Adopt the position vector a jitted dispatch returned (copied —
+        np.asarray of a device array is a read-only view)."""
+        self.pos = np.array(positions, np.int32)
+
+    def advance_live(self) -> None:
+        """Advance every bound slot's position by one (a decode tick)."""
+        self.pos = self.pos + self.live().astype(np.int32)

@@ -314,27 +314,44 @@ def test_engine_generate_rejects_over_capacity():
     assert out.shape == (1, 6)
 
 
-def test_engine_temperature_path_uses_fresh_subkey_per_token():
-    """The first sampled token used to consume the raw `key`, which was then
-    split again for subsequent tokens (key reuse). The first draw must come
-    from a subkey: pin it against an explicit split, and the whole stream
-    must be reproducible from the same seed."""
-    from repro.serve.engine import _sample
+def test_engine_temperature_sampling_is_keyed_by_request_id():
+    """Sampled streams used to be keyed by batch position (split the key
+    once per tick, row i takes subkey i), so any scheduler reordering or
+    batch recomposition changed every request's tokens. Keys are now
+    derived from the REQUEST ID: a request's stream must be a pure function
+    of (key, uid, its own logits) — reversing the batch with request_ids
+    travelling along reproduces each stream exactly."""
+    from repro.serve.engine import _request_key, _sample
 
     cfg, model, params = _built("qwen2_5_14b")
     engine = ServeEngine(model, params, max_seq=MAX_SEQ)
     rng = np.random.default_rng(3)
-    prompt = {
-        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32),
-        "task_ids": jnp.zeros(2, jnp.int32),
-    }
+    toks = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    prompt = {"tokens": jnp.asarray(toks), "task_ids": jnp.zeros(2, jnp.int32)}
     key = jax.random.PRNGKey(42)
     out = engine.generate(prompt, num_tokens=4, key=key, temperature=1.0)
     out2 = engine.generate(prompt, num_tokens=4, key=key, temperature=1.0)
     np.testing.assert_array_equal(out, out2)  # deterministic in the seed
-    # white-box pin: first token == sample(prefill logits, first subkey)
-    task_ids = jnp.asarray(prompt["task_ids"])
-    logits, _, _ = engine._prefill_prompt(prompt, task_ids, None)
-    _, sub = jax.random.split(key)
-    expect = np.asarray(_sample(logits, sub, 1.0))
-    np.testing.assert_array_equal(out[:, 0], expect)
+    # reorder stability: same requests, reversed rows, ids travel along
+    rev = {"tokens": jnp.asarray(toks[::-1].copy()),
+           "task_ids": jnp.zeros(2, jnp.int32)}
+    out_rev = engine.generate(rev, num_tokens=4, key=key, temperature=1.0,
+                              request_ids=[1, 0])
+    np.testing.assert_array_equal(out_rev[::-1], out)
+    # white-box pin: request u's token t samples fold_in(fold_in(key,u),t)
+    # over its own logits row (captured via the pluggable sampler)
+    logits = {}
+
+    def probe(req, row):
+        logits[(req.uid, len(req.out))] = np.asarray(row)
+        return np.argmax(row, axis=-1)
+
+    b = ContinuousBatcher(model, params, num_slots=2, max_seq=MAX_SEQ,
+                          sample_fn=probe)
+    for u in range(2):
+        b.submit(Request(uid=u, tokens=toks[u], max_new=1))
+    b.run()
+    for u in range(2):
+        expect = np.asarray(_sample(jnp.asarray(logits[(u, 0)]),
+                                    _request_key(key, u, 0), 1.0))
+        np.testing.assert_array_equal(out[u, 0], expect)

@@ -1,0 +1,333 @@
+"""Layered serving core: scheduler policies, Sarathi-style chunked
+prefill-decode interleaving, cancellation/timeout retirement, and the
+run() tick-budget contract.
+
+The parity oracle: with ``policy="fifo", chunk_budget=None`` the layered
+stack reproduces the pre-refactor serving behavior token-for-token (pinned
+by test_serve_batching/test_serve_prefill); here we pin that CHUNKED
+interleaving — any policy, any budget — still yields the same greedy
+tokens per request (only latency may change), dense and paged.
+
+``SERVE_TEST_ATTN_BACKEND=pallas`` re-runs the model-driven tests on the
+flash kernels (scripts/ci.sh exercises both backends).
+"""
+import dataclasses
+import functools
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import TransformerLM
+from repro.serve import (
+    ContinuousBatcher, PagingSpec, Request, Scheduler, ServeEngine, SlotMap,
+    TickBudgetExceeded,
+)
+
+BACKEND = os.environ.get("SERVE_TEST_ATTN_BACKEND", "jnp")
+MAX_SEQ = 32
+
+
+@functools.lru_cache(maxsize=None)
+def _built():
+    cfg = dataclasses.replace(
+        get("qwen2_5_14b", smoke=True), attn_backend=BACKEND
+    )
+    model = TransformerLM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, shapes, **kw):
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i, tokens=rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+                max_new=mn, **kw)
+        for i, (n, mn) in enumerate(shapes)
+    ]
+
+
+def _spec():
+    return PagingSpec.sized(8, MAX_SEQ, pool_tokens=2 * MAX_SEQ)
+
+
+# ===================================================== scheduler unit tests
+def _fake(uid, n_tokens, priority=0):
+    return types.SimpleNamespace(
+        uid=uid, tokens=np.zeros(n_tokens, np.int32), priority=priority,
+        timeout_s=None, submit_time=None, _arrival=0,
+    )
+
+
+def test_scheduler_validates_policy_and_budget():
+    with pytest.raises(ValueError, match="policy"):
+        Scheduler(policy="lifo")
+    with pytest.raises(ValueError, match="chunk_budget"):
+        Scheduler(chunk_budget=0)
+
+
+def test_policy_ordering_with_arrival_tiebreak():
+    reqs = [_fake(0, 9, priority=2), _fake(1, 3, priority=1),
+            _fake(2, 3, priority=1), _fake(3, 6, priority=0)]
+    for policy, want in (
+        ("fifo", [0, 1, 2, 3]),
+        ("sjf", [1, 2, 3, 0]),       # shortest prompt; ties by arrival
+        ("priority", [3, 1, 2, 0]),  # lower value first; ties by arrival
+    ):
+        sched = Scheduler(policy=policy)
+        for r in reqs:
+            sched.submit(r)
+        assert [r.uid for r in sched.ordered_queue()] == want
+        # the queue itself stays in arrival order (a view, not a re-sort)
+        assert [r.uid for r in sched.queue] == [0, 1, 2, 3]
+        sched.queue.clear()
+
+
+def test_admission_stops_at_blocked_policy_head():
+    """A policy head the allocator cannot place must STOP admission, not be
+    skipped — otherwise small requests starve large ones forever."""
+    sched = Scheduler(policy="sjf")
+    big, small = _fake(0, 9), _fake(1, 2)
+    sched.submit(big)
+    sched.submit(small)
+    # under sjf `small` is the head and binds; `big` blocks -> stop
+    admitted = sched.admit([0, 1], lambda s, r: r is small)
+    assert [(s, r.uid) for s, r in admitted] == [(0, 1)]
+    assert [r.uid for r in sched.queue] == [0]  # big still queued, head spot
+
+
+def test_plan_prefill_respects_budget_chunk_and_policy():
+    sched = Scheduler(policy="sjf", chunk_budget=5)
+    prefilling = [
+        (0, _fake(0, 9), 7),  # longest prompt: planned last under sjf
+        (1, _fake(1, 2), 2),
+        (2, _fake(2, 4), 4),
+    ]
+    plan = sched.plan_prefill(prefilling, chunk=4)
+    # sjf order: uid1 (2 toks) -> uid2 (min(4, 4, 3)=3) -> budget exhausted
+    assert plan == [(1, 2), (2, 3)]
+    assert sum(n for _, n in plan) <= 5
+    # unbounded budget: everyone advances up to the chunk width
+    sched2 = Scheduler(chunk_budget=None)
+    assert sorted(sched2.plan_prefill(prefilling, chunk=4)) == [
+        (0, 4), (1, 2), (2, 4)
+    ]
+
+
+def test_slotmap_bookkeeping():
+    sm = SlotMap(3)
+    assert sm.free_slots() == [0, 1, 2] and not sm.any_live()
+    r = _fake(7, 4)
+    r.task_id = 2
+    sm.bind(1, r)
+    assert sm.free_slots() == [0, 2]
+    assert sm.slot_of(7) == 1 and sm.slot_of(9) is None
+    assert list(sm.task_ids()) == [0, 2, 0]
+    assert list(sm.live()) == [False, True, False]
+    sm.advance_live()
+    assert list(sm.pos) == [0, 1, 0]
+    assert sm.release(1) is r
+    assert not sm.any_live()
+
+
+# ================================================ chunked interleaving parity
+def _greedy(policy, chunk_budget, paging=None):
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+        paging=paging, policy=policy, chunk_budget=chunk_budget,
+    )
+    # staggered prompts over 2 slots, 4 requests: forces slot reuse and
+    # mid-prefill/decode coexistence in chunked mode
+    for r in _requests(cfg, ((9, 5), (3, 6), (6, 4), (2, 5))):
+        batcher.submit(r)
+    done = batcher.run()
+    assert len(done) == 4 and all(r.done and not r.truncated for r in done)
+    return {r.uid: r.out for r in done}, batcher
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_interleaving_token_parity(paged):
+    """Greedy tokens are scheduling-invariant: chunked co-scheduling under
+    any policy must reproduce the unchunked FIFO oracle per request, dense
+    and paged — only latency is allowed to change."""
+    spec = _spec() if paged else None
+    oracle, base = _greedy("fifo", None, paging=spec)
+    assert base.mixed_dispatches == 0  # legacy path untouched
+    for policy in ("fifo", "sjf", "priority"):
+        out, b = _greedy(policy, 6, paging=spec)
+        assert out == oracle, policy
+        # chunked mode serves everything through fused dispatches
+        assert b.mixed_dispatches > 0 and b.decode_dispatches == 0
+    if spec is not None:
+        assert base.allocator.free_blocks == spec.num_blocks - 1
+
+
+def test_chunk_budget_keeps_decode_flowing():
+    """The head-of-line fix: while a long prompt prefills under a small
+    budget, an already-decoding request keeps emitting a token EVERY tick
+    instead of stalling until the prompt completes."""
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=2,
+        policy="sjf", chunk_budget=2,
+    )
+    long_req, short_req = _requests(cfg, ((12, 3), (2, 10)))
+    batcher.submit(long_req)
+    batcher.submit(short_req)
+    interleaved = 0
+    while not short_req.done:
+        emitted = len(short_req.out)
+        batcher.step()
+        if short_req.prefill_remaining == 0 and long_req.prefill_remaining > 0 \
+                and not short_req.done:
+            assert len(short_req.out) == emitted + 1  # decode not stalled
+            interleaved += 1
+    assert interleaved >= 3  # 12-token prompt at budget 2 spans many ticks
+    batcher.run()
+    assert long_req.done and len(long_req.out) == 3
+
+
+# ========================================== cancellation frees paged blocks
+def test_cancel_queued_and_unknown():
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(model, params, num_slots=1, max_seq=MAX_SEQ)
+    r0, r1 = _requests(cfg, ((3, 2), (3, 2)))
+    batcher.submit(r0)
+    batcher.submit(r1)
+    assert batcher.cancel(1) and r1.cancelled and not r1.done
+    assert not batcher.cancel(99)
+    done = batcher.run()
+    assert {r.uid for r in done} == {0, 1} and not r1.out
+
+
+@pytest.mark.parametrize("when", ["mid_prefill", "mid_decode"])
+def test_cancel_mid_flight_frees_all_blocks_and_stops_tokens(when):
+    """Allocator invariant: cancelling an in-flight request returns the
+    free count to its pre-submit level, and the request never emits another
+    token — mid-prefill (no tokens yet) and mid-decode."""
+    cfg, model, params = _built()
+    spec = _spec()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=2,
+        paging=spec, chunk_budget=2,
+    )
+    pre = batcher.allocator.free_blocks
+    (victim,) = _requests(cfg, ((10, 6),))
+    batcher.submit(victim)
+    steps = 1 if when == "mid_prefill" else 8
+    for _ in range(steps):
+        batcher.step()
+    if when == "mid_prefill":
+        assert 0 < victim.prompt_done < len(victim.tokens) and not victim.out
+    else:
+        assert victim.prefill_remaining == 0 and len(victim.out) >= 1
+    n_before = len(victim.out)
+    assert batcher.cancel(victim.uid)
+    assert batcher.allocator.free_blocks == pre  # ALL blocks returned
+    assert victim.cancelled and not victim.done
+    for _ in range(3):
+        batcher.step()
+    assert len(victim.out) == n_before  # never another token
+    assert batcher.run() == [victim]
+
+
+def test_cancel_from_streaming_callback():
+    """Cancelling from on_token mid-emission round must not crash the tick
+    or emit past the cancellation."""
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+        chunk_budget=4,
+    )
+    r0, r1 = _requests(cfg, ((3, 8), (3, 8)))
+
+    def kill_r1_after_two(req, tok):
+        if req.uid == 1 and len(req.out) == 2:
+            batcher.cancel(1)
+
+    batcher.on_token = kill_r1_after_two
+    batcher.submit(r0)
+    batcher.submit(r1)
+    done = batcher.run()
+    assert {r.uid for r in done} == {0, 1}
+    assert r1.cancelled and len(r1.out) == 2
+    assert r0.done and len(r0.out) == 8
+
+
+# ========================================================= deadlines/timeouts
+def test_timeout_expires_queued_and_inflight_requests():
+    cfg, model, params = _built()
+    clock = [0.0]
+    spec = _spec()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=1, max_seq=MAX_SEQ, prefill_chunk=4,
+        paging=spec, now_fn=lambda: clock[0],
+    )
+    pre = batcher.allocator.free_blocks
+    slow, queued = _requests(cfg, ((4, 12), (4, 2)), timeout_s=5.0)
+    batcher.submit(slow)
+    batcher.submit(queued)  # waits behind `slow` on the single slot
+    batcher.step()  # admission gulp emits token 1, the tick token 2
+    assert len(slow.out) == 2 and not queued.out
+    clock[0] = 6.0  # both requests are now past their deadline
+    done = batcher.run()
+    assert {r.uid for r in done} == {0, 1}
+    assert slow.timed_out and queued.timed_out
+    assert not slow.done and not queued.done
+    assert len(slow.out) == 2  # no tokens after expiry
+    assert batcher.allocator.free_blocks == pre  # in-flight blocks returned
+
+
+# ======================================================= run() budget contract
+def test_run_exhaustion_raises_and_flags():
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(model, params, num_slots=1, max_seq=MAX_SEQ)
+    (req,) = _requests(cfg, ((3, 10),))
+    batcher.submit(req)
+    with pytest.raises(TickBudgetExceeded, match="uids \\[0\\]"):
+        batcher.run(max_ticks=3)
+    assert req.timed_out and not req.done  # can't be mistaken for done
+    # the flagging variant returns partial results and leaves work resumable
+    req.timed_out = False
+    finished = batcher.run(max_ticks=2, on_exhausted="flag")
+    assert finished == [] and req.timed_out and len(req.out) < 10
+    req.timed_out = False
+    (done,) = batcher.run()  # a later call with budget finishes the job
+    assert done is req and req.done and len(req.out) == 10
+    with pytest.raises(ValueError, match="on_exhausted"):
+        batcher.run(on_exhausted="ignore")
+
+
+# ============================================================= streaming API
+def test_streaming_tokens_arrive_per_tick_in_order():
+    cfg, model, params = _built()
+    seen = []
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+        chunk_budget=4, on_token=lambda r, t: seen.append((r.uid, t)),
+    )
+    reqs = _requests(cfg, ((5, 4), (3, 6)))
+    for r in reqs:
+        batcher.submit(r)
+    batcher.run()
+    for r in reqs:
+        assert [t for u, t in seen if u == r.uid] == r.out
+
+
+def test_engine_streaming_callback():
+    cfg, model, params = _built()
+    engine = ServeEngine(model, params, max_seq=MAX_SEQ)
+    rng = np.random.default_rng(5)
+    prompt = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 4)), jnp.int32),
+        "task_ids": jnp.zeros(2, jnp.int32),
+    }
+    seen = {}
+    out = engine.generate(prompt, num_tokens=5, request_ids=[10, 11],
+                          on_token=lambda uid, t: seen.setdefault(uid, []).append(t))
+    assert list(out.shape) == [2, 5]
+    assert seen[10] == list(out[0]) and seen[11] == list(out[1])
