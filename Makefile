@@ -13,18 +13,22 @@ bench-serve:
 # reduced serving benchmark for CI: runs in interpret/CPU mode and asserts
 # O(1) dispatches/tick, engine==batcher parity, paged-vs-dense parity with
 # >=4x slots at equal KV memory (block_size 8 and 16), parallel==scan
-# prefill parity, jnp==pallas attention-backend parity, and the
-# Poisson-trace tail-latency property (sjf+chunked p99 TTFT <= fifo) — and
-# persists the perf trajectory (decode/prefill tok/s per backend,
-# slots-per-KV-byte, TTFT/ITL percentiles) to BENCH_serve.json so future
-# PRs can diff perf; the trailing check fails the build if the latency
-# section (p99 TTFT) ever silently drops out of the report
+# prefill parity, jnp==pallas attention-backend parity, the Poisson-trace
+# tail-latency property (sjf+chunked p99 TTFT <= fifo), and the graph-mixed
+# multitask adapter properties (zero store == no-adapter parity, O(1)
+# dispatches with per-task adapters live) — and persists the perf
+# trajectory (decode/prefill tok/s per backend, slots-per-KV-byte, TTFT/ITL
+# percentiles, multitask overhead ratio) to BENCH_serve.json so future PRs
+# can diff perf; the trailing check fails the build if the latency or
+# multitask sections ever silently drop out of the report
 bench-smoke:
 	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6 --json BENCH_serve.json
-	python -c "import json; r = json.load(open('BENCH_serve.json')); assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r"
+	python -c "import json; r = json.load(open('BENCH_serve.json')); assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r; assert r['multitask']['overhead_ratio'] > 0, r"
 
 # the same serving loop with attn_backend="pallas" as the DEFAULT for every
 # section (interpret mode on CPU), so the kernel serving path — not just the
-# jnp default — is exercised end-to-end on every PR
+# jnp default — is exercised end-to-end on every PR; the multitask section
+# is skipped here because the pallas adapter-serving path is already pinned
+# by SERVE_TEST_ATTN_BACKEND=pallas tests/test_serve_multitask.py in ci.sh
 bench-smoke-pallas:
-	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency
+	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency --skip-multitask

@@ -8,6 +8,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # cancellation and timeouts must hold on BOTH backends
 SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_serve_scheduler.py
+# graph-mixed multitask adapter serving once more on the pallas backend:
+# zero-adapter parity, consensus collapse, O(1) dispatches and the delayed
+# online-update loop must hold with the flash kernels driving attention too
+# (the default suite above already ran these under the jnp backend)
+SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_serve_multitask.py
 # serving benchmark smoke: O(1)-dispatch, engine==batcher parity, paged-cache
 # parity/memory, prefill-mode parity, jnp-vs-pallas backend parity and the
 # Poisson-trace tail-latency property run on every PR (interpret/CPU mode),

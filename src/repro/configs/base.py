@@ -56,6 +56,10 @@ class ArchConfig:
     tie_embeddings: bool = False
     # multi-task personalization (the paper's technique)
     num_tasks: int = 16
+    # default low-rank width for serving-time per-task adapters
+    # (repro.serve.adapters.TaskAdapterStore); 0 = store callers must pass
+    # an explicit rank
+    adapter_rank: int = 0
     # perf knobs
     q_chunk: int = 1024
     mamba_chunk: int = 128
@@ -142,6 +146,7 @@ _ARCHS = [
     "olmo_1b",
     "phi4_mini_3_8b",
     "multitask_linreg",
+    "multitask_lm",
 ]
 
 

@@ -77,6 +77,21 @@ def bol_delayed(
     return RunResult(wf, trace)
 
 
+def per_source_stale(hist: Array, delays: Array) -> Array:
+    """Pick one stale iterate per SOURCE task from a history ring buffer.
+
+    ``hist`` is ``(H, m, ...)`` with ``hist[0]`` the newest stacked iterate;
+    ``delays`` is ``(m,)`` with ``0 <= delays[k] < H``. Returns ``(m, ...)``
+    where row ``k`` is ``hist[delays[k], k]`` — the view every reader gets of
+    task k's parameters. This is the serving-side coarsening of the per-edge
+    ``d_ik(t)`` schedule in :func:`bol_delayed`: one delay per source instead
+    of per (reader, source) pair, still bounded by Gamma, so Theorem 7's
+    degraded rate applies with the same Gamma.
+    """
+    m = hist.shape[1]
+    return hist[delays, jnp.arange(m)]
+
+
 def theorem7_rate(eta: float, tau: float, gamma: int) -> float:
     """Per-iteration contraction factor (1 - eta/(eta+tau))^(1/(1+Gamma))."""
     return float((1.0 - eta / (eta + tau)) ** (1.0 / (1.0 + gamma)))

@@ -1,4 +1,9 @@
-from repro.kernels.graph_mix import graph_mix, graph_mix_reference
+from repro.kernels.graph_mix import (
+    graph_mix,
+    graph_mix_reference,
+    graph_mix_tree,
+    graph_mix_tree_reference,
+)
 from repro.kernels.decode_attention import (
     decode_attention,
     decode_attention_reference,

@@ -1,2 +1,5 @@
-from repro.kernels.graph_mix.ops import graph_mix
-from repro.kernels.graph_mix.ref import graph_mix_reference
+from repro.kernels.graph_mix.ops import graph_mix, graph_mix_tree
+from repro.kernels.graph_mix.ref import (
+    graph_mix_reference,
+    graph_mix_tree_reference,
+)

@@ -9,3 +9,13 @@ def graph_mix_reference(mu: jax.Array, theta: jax.Array) -> jax.Array:
         "ki,kd->id", mu.astype(jnp.float32), theta.astype(jnp.float32)
     )
     return out.astype(theta.dtype)
+
+
+def graph_mix_tree_reference(mu: jax.Array, tree):
+    """Leaf-by-leaf oracle for ``graph_mix_tree``: every task-leading
+    ``(m, ...)`` leaf is flattened, mixed, and reshaped back."""
+    m = mu.shape[0]
+    return jax.tree.map(
+        lambda t: graph_mix_reference(mu, t.reshape(m, -1)).reshape(t.shape),
+        tree,
+    )

@@ -41,6 +41,26 @@ def freeze_dead_slots(new_state, old_state, live):
     )
 
 
+# ------------------------------------------------------- per-task adapters
+def apply_task_lora(x: Array, ad: dict) -> Array:
+    """Batched low-rank per-task delta: x @ a @ b with per-ROW factors.
+
+    x: (B, C, d) block activations; ad["a"]: (B, d, r), ad["b"]: (B, r, d) —
+    one factor pair per batch row, pre-gathered by task id (multi-LoRA).
+    Accumulates in f32 like every other matmul here. Zero factors contribute
+    an exact IEEE +0.0, so adding the result preserves token-for-token
+    parity with the adapter-free path.
+    """
+    a = ad["a"].astype(jnp.float32)
+    b = ad["b"].astype(jnp.float32)
+    h = jnp.einsum(
+        "bcd,bdr->bcr", x.astype(jnp.float32), a,
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum("bcr,bro->bco", h, b, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
 # -------------------------------------------------------------------- norms
 def rms_norm(x: Array, gain: Array | None, eps: float = 1e-6) -> Array:
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)

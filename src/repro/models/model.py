@@ -33,7 +33,15 @@ from repro.models import attention as attn_lib
 from repro.models import mamba2 as mamba_lib
 from repro.models import xlstm as xlstm_lib
 from repro.models.attention import MLADims
-from repro.models.layers import apply_mlp, apply_norm, dense_init, init_mlp, init_norm, matmul
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    apply_task_lora,
+    dense_init,
+    init_mlp,
+    init_norm,
+    matmul,
+)
 from repro.models.moe import apply_moe, init_moe
 
 Array = jax.Array
@@ -165,17 +173,34 @@ class TransformerLM:
                 )
         return x
 
-    def _router_bias(self, params, batch, seq: int) -> Array | None:
+    # Per-task param gathers must CLIP out-of-range ids, not use jnp.take's
+    # default NaN fill: serving dead lanes carry the null-adapter id
+    # num_tasks (one past the params["task"] stacks), and a NaN-filled dead
+    # row would poison LIVE rows through the MoE dispatch's shared expert
+    # buffers. Clipped dead-lane gathers feed only discarded outputs.
+    _TAKE_MODE = "clip"
+
+    def _router_bias(self, params, batch, seq: int, task_ad=None) -> Array | None:
         if not self.cfg.uses_moe or "task_ids" not in batch:
             return None
-        bias = jnp.take(params["task"]["router_bias"], batch["task_ids"], axis=0)
+        bias = jnp.take(
+            params["task"]["router_bias"], batch["task_ids"], axis=0,
+            mode=self._TAKE_MODE,
+        )
+        if task_ad is not None and "router_bias" in task_ad:
+            bias = bias + task_ad["router_bias"].astype(bias.dtype)
         return jnp.broadcast_to(bias[:, None, :], (bias.shape[0], seq, bias.shape[1]))
 
-    def _logits(self, params, x, batch) -> Array:
+    def _logits(self, params, x, batch, task_ad=None) -> Array:
         c = self.cfg
         x = apply_norm(c.norm_kind, x, params["final_norm"] or None)
         if "final_gain" in params["task"] and "task_ids" in batch:
-            gain = jnp.take(params["task"]["final_gain"], batch["task_ids"], axis=0)
+            gain = jnp.take(
+                params["task"]["final_gain"], batch["task_ids"], axis=0,
+                mode=self._TAKE_MODE,
+            )
+            if task_ad is not None and "final_gain" in task_ad:
+                gain = gain + task_ad["final_gain"].astype(gain.dtype)
             x = x * (1.0 + gain[:, None, :].astype(x.dtype))
         if c.tie_embeddings:
             head = params["embed"].T
@@ -186,7 +211,12 @@ class TransformerLM:
             preferred_element_type=jnp.float32,
         )
         if "task_ids" in batch:
-            hb = jnp.take(params["task"]["head_bias"], batch["task_ids"], axis=0)
+            hb = jnp.take(
+                params["task"]["head_bias"], batch["task_ids"], axis=0,
+                mode=self._TAKE_MODE,
+            )
+            if task_ad is not None and "head_bias" in task_ad:
+                hb = hb + task_ad["head_bias"].astype(hb.dtype)
             logits = logits + hb[:, None, :].astype(jnp.float32)
         if c.logits_sharding is not None:
             from jax.sharding import PartitionSpec
@@ -519,9 +549,28 @@ class TransformerLM:
             backend=backend, block_tables=block_tables,
         )
 
+    def _gather_adapters(self, adapters, task_ids):
+        """Per-row multi-LoRA gather for one serving dispatch: pick each
+        batch row's task adapters from the stacked serving tree (built by
+        ``repro.serve.adapters.TaskAdapterStore.refresh``, leading axis
+        num_tasks + 1 with a terminal zero null row for dead lanes). Stage
+        leaves (T, P, ...) -> (P, B, ...) so they scan alongside the
+        period-stacked params; task leaves (T, ...) -> (B, ...)."""
+        stage_ad = [
+            jax.tree.map(
+                lambda t: jnp.moveaxis(jnp.take(t, task_ids, axis=0), 0, 1),
+                stage,
+            )
+            for stage in adapters["stages"]
+        ]
+        task_ad = jax.tree.map(
+            lambda t: jnp.take(t, task_ids, axis=0), adapters["task"]
+        )
+        return stage_ad, task_ad
+
     def _attn_block(
         self, kind, p, x, cache, pos, router_bias, moe_live, write, view,
-        attend,
+        attend, ad=None,
     ):
         """Attention block body shared by decode (C == 1) and parallel
         prefill (C > 1): project the chunk, write its KV slab through
@@ -568,6 +617,10 @@ class TransformerLM:
                 o.reshape(b, cl, c.num_heads * c.head_dim), p["attn"]["wo"]
             )
             new_cache = (k_cache, v_cache)
+        if ad is not None:
+            # parallel per-task delta off the same normed input (h is still
+            # the norm1 output on both the GQA and MLA paths)
+            out = out + apply_task_lora(h, ad["attn"])
         x = x + out
         h = apply_norm(c.norm_kind, x, p["norm2"] or None)
         if kind == "attn_moe":
@@ -578,16 +631,19 @@ class TransformerLM:
             )
         else:
             ff = apply_mlp(p["mlp"], h, c.mlp_kind)
+        if ad is not None:
+            ff = ff + apply_task_lora(h, ad["mlp"])
         return x + ff, new_cache
 
     def _block_decode(
         self, kind, p, x, cache, pos, router_bias, live=None,
-        block_tables=None,
+        block_tables=None, ad=None,
     ):
         """pos: (B,) per-slot positions; live: optional (B,) slot mask;
         block_tables: optional (B, max_blocks) — paged attention caches
         (cache entries are shared pools, writes scatter through the table,
-        reads attend over the gathered per-slot view)."""
+        reads attend over the gathered per-slot view); ad: optional per-row
+        adapter factors for this block (already gathered by task id)."""
         c = self.cfg
         if kind in self._ATTN_KINDS:
             if block_tables is None:
@@ -601,7 +657,7 @@ class TransformerLM:
             attend = self._make_attend(pos, block_tables)
             return self._attn_block(
                 kind, p, x, cache, pos, router_bias, live, write, view,
-                attend,
+                attend, ad,
             )
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -609,33 +665,45 @@ class TransformerLM:
                 p["mamba"], h, cache, d_state=c.ssm_state,
                 head_dim=c.ssm_head_dim, live=live,
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         if kind == "mlstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
             out, state = xlstm_lib.mlstm_step(
                 p["mlstm"], h, cache, n_heads=c.num_heads, live=live
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         if kind == "slstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
             out, state = xlstm_lib.slstm_step(
                 p["slstm"], h, cache, n_heads=c.num_heads, live=live
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         raise ValueError(kind)
 
-    def _run_cached_stages(self, params, x, caches, block_fn):
+    def _run_cached_stages(self, params, x, caches, block_fn,
+                           stage_adapters=None):
         """Stage loop shared by ``decode_step`` and ``prefill_step``: scan
         (or unroll) the period-stacked params + cache entries, calling
-        ``block_fn(kind, p, h, cache)`` per block. Returns (x, new_caches).
-        """
+        ``block_fn(kind, p, h, cache, ad)`` per block. stage_adapters:
+        optional list (stage) of {slot: adapter leaves (P, B, ...)} already
+        gathered per batch row — scanned alongside params so every period
+        applies its own adapter slice in the SAME dispatch. Returns
+        (x, new_caches)."""
         new_caches = []
         for si, pat in enumerate(self._stage_patterns()):
             slots = params["stages"][si]
+            # {} has no leaves, so it rides through scan/unroll untouched
+            ad_si = stage_adapters[si] if stage_adapters is not None else {}
 
             def body(carry, xs, pat=pat):
                 h = carry
-                slot_params, slot_caches = xs
+                slot_params, slot_caches, slot_ad = xs
                 out_caches = {}
                 for j, kind in enumerate(pat):
                     p = (
@@ -643,7 +711,10 @@ class TransformerLM:
                         if kind == "shared_attn"
                         else slot_params.get(f"slot{j}")
                     )
-                    h, nc = block_fn(kind, p, h, slot_caches[f"slot{j}"])
+                    h, nc = block_fn(
+                        kind, p, h, slot_caches[f"slot{j}"],
+                        slot_ad.get(f"slot{j}"),
+                    )
                     out_caches[f"slot{j}"] = nc
                 return h, out_caches
 
@@ -651,17 +722,21 @@ class TransformerLM:
                 reps = jax.tree_util.tree_leaves(caches[si])[0].shape[0]
                 outs = []
                 for i in range(reps):
-                    xs_i = jax.tree.map(lambda t: t[i], (slots, caches[si]))
+                    xs_i = jax.tree.map(
+                        lambda t: t[i], (slots, caches[si], ad_si)
+                    )
                     x, co = body(x, xs_i)
                     outs.append(co)
                 stage_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
             else:
-                x, stage_cache = jax.lax.scan(body, x, (slots, caches[si]))
+                x, stage_cache = jax.lax.scan(
+                    body, x, (slots, caches[si], ad_si)
+                )
             new_caches.append(stage_cache)
         return x, new_caches
 
     def decode_step(self, params, batch, caches, pos, live=None,
-                    block_tables=None):
+                    block_tables=None, adapters=None):
         """One-token decode. batch: {'tokens': (B,1[,K]) [, task_ids, vlm...]}.
 
         pos: () shared position or (B,) PER-SLOT positions — the vectorized
@@ -675,22 +750,33 @@ class TransformerLM:
         GQA attention dispatches on ``cfg.attn_backend`` ("pallas" = flash
         decode kernels, dense or paged; MLA/recurrent layers always take
         the jnp path — see repro.kernels.runtime).
+        adapters: optional graph-mixed serving tree from
+        ``TaskAdapterStore.serving`` — per-row low-rank deltas gathered by
+        ``batch['task_ids']`` (same traced-array pytree every tick, so
+        swapping adapter VALUES never retraces).
         Returns (logits (B,1,[K,]V), new caches)."""
         x = self._constrain(self._embed(params, batch))
         b = x.shape[0]
         pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-        rb = self._router_bias(params, batch, 1)
+        stage_ad = task_ad = None
+        if adapters is not None:
+            stage_ad, task_ad = self._gather_adapters(
+                adapters, batch["task_ids"]
+            )
+        rb = self._router_bias(params, batch, 1, task_ad)
         x, new_caches = self._run_cached_stages(
             params, x, caches,
-            lambda kind, p, h, cache: self._block_decode(
-                kind, p, h, cache, pos, rb, live, block_tables
+            lambda kind, p, h, cache, ad: self._block_decode(
+                kind, p, h, cache, pos, rb, live, block_tables, ad
             ),
+            stage_ad,
         )
-        logits = self._logits(params, x, batch)
+        logits = self._logits(params, x, batch, task_ad)
         return logits, new_caches
 
     def _block_prefill(
         self, kind, p, x, cache, pos, valid, router_bias, block_tables=None,
+        ad=None,
     ):
         """(B, C)-chunk counterpart of ``_block_decode``: all C tokens of the
         chunk are computed in parallel against the cache. pos: (B,) per-slot
@@ -713,7 +799,7 @@ class TransformerLM:
             attend = self._make_attend(pos, block_tables)
             return self._attn_block(
                 kind, p, x, cache, pos, router_bias, valid, write, view,
-                attend,
+                attend, ad,
             )
         if kind == "mamba":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -721,6 +807,8 @@ class TransformerLM:
                 p["mamba"], h, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
                 chunk=c.mamba_chunk, state=cache, valid=valid,
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         if kind == "mlstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -734,6 +822,8 @@ class TransformerLM:
                 p["mlstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk,
                 state=cache, valid=valid,
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         if kind == "slstm":
             h = apply_norm(c.norm_kind, x, p["norm"] or None)
@@ -741,11 +831,13 @@ class TransformerLM:
                 p["slstm"], h, n_heads=c.num_heads, chunk=c.xlstm_chunk,
                 state=cache, valid=valid,
             )
+            if ad is not None:
+                out = out + apply_task_lora(h, ad["out"])
             return x + out, state
         raise ValueError(kind)
 
     def prefill_step(self, params, batch, caches, positions, valid,
-                     block_tables=None):
+                     block_tables=None, adapters=None):
         """Multi-token prefill: ONE dispatch computes a whole (B, C) prompt
         chunk — all C tokens in parallel — against caches at per-slot
         offsets. batch: {'tokens': (B, C[, K]) [, task_ids, vlm extras]};
@@ -766,12 +858,18 @@ class TransformerLM:
         x = self._constrain(self._embed(params, batch))
         b, cl = x.shape[:2]
         pos = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (b,))
-        rb = self._router_bias(params, batch, cl)
+        stage_ad = task_ad = None
+        if adapters is not None:
+            stage_ad, task_ad = self._gather_adapters(
+                adapters, batch["task_ids"]
+            )
+        rb = self._router_bias(params, batch, cl, task_ad)
         x, new_caches = self._run_cached_stages(
             params, x, caches,
-            lambda kind, p, h, cache: self._block_prefill(
-                kind, p, h, cache, pos, valid, rb, block_tables
+            lambda kind, p, h, cache, ad: self._block_prefill(
+                kind, p, h, cache, pos, valid, rb, block_tables, ad
             ),
+            stage_ad,
         )
         # lm head over ONE hidden state per slot (its last valid token) —
         # the (B, C, V) logits slab would be C x the largest matmul in the
@@ -779,5 +877,5 @@ class TransformerLM:
         n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
         idx = jnp.maximum(n_valid - 1, 0)
         x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B,1,d)
-        logits = self._logits(params, x_last, batch)
+        logits = self._logits(params, x_last, batch, task_ad)
         return logits, new_caches

@@ -1,3 +1,4 @@
+from repro.serve.adapters import TaskAdapterStore
 from repro.serve.engine import generate, ServeEngine
 from repro.serve.batching import ContinuousBatcher, Request, TickBudgetExceeded
 from repro.serve.scheduler import Scheduler, POLICIES

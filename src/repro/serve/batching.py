@@ -123,6 +123,7 @@ class ContinuousBatcher:
         now_fn=None,
         on_token=None,
         sample_fn=None,
+        adapters=None,
     ):
         self.model = model
         self.params = params
@@ -133,6 +134,18 @@ class ContinuousBatcher:
         self.prefill_mode = prefill_mode
         self.on_token = on_token
         self.sample_fn = sample_fn
+        if adapters is not None and adapters.num_tasks != model.cfg.num_tasks:
+            raise ValueError(
+                f"adapter store serves {adapters.num_tasks} tasks but the "
+                f"model has num_tasks={model.cfg.num_tasks}"
+            )
+        self.adapters = adapters
+        # dead/free lanes gather this id: the serving tree's reserved zero
+        # null row (index num_tasks) — exact-zero adapters, and for the
+        # params["task"] takes an out-of-range id jnp.take clamps to the
+        # last task, whose gathered rows only feed discarded dead-lane
+        # outputs
+        self._null_task = model.cfg.num_tasks
         self.scheduler = scheduler if scheduler is not None else Scheduler(
             policy=policy, chunk_budget=chunk_budget, now_fn=now_fn
         )
@@ -187,6 +200,15 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.uid}: empty prompt — at least one prompt "
                 "token is required to produce the first logits"
+            )
+        if not 0 <= req.task_id < self.model.cfg.num_tasks:
+            # jnp.take clamps out-of-range indices under jit, so an invalid
+            # id would silently serve the FIRST/LAST task's parameters —
+            # reject at admission instead
+            raise ValueError(
+                f"request {req.uid}: task_id {req.task_id} outside "
+                f"[0, {self.model.cfg.num_tasks}) — out-of-range ids would "
+                "silently clamp to another task's parameters"
             )
         total = n + req.max_new
         if total > self.slot_capacity:
@@ -251,6 +273,12 @@ class ContinuousBatcher:
             jnp.asarray(self.block_tables) if self.paging is not None else None
         )
 
+    def _adapter_tree(self):
+        """The graph-mixed serving tree for this tick (constant structure
+        and shapes, so value swaps between ticks never retrace); None
+        (empty pytree) without a store — the jitted signature is shared."""
+        return self.adapters.serving if self.adapters is not None else None
+
     def _free_slot_blocks(self, s: int):
         if self.paging is not None and self.slot_blocks[s]:
             self.allocator.free(self.slot_blocks[s])
@@ -300,6 +328,10 @@ class ContinuousBatcher:
                 self.finished.append(req)
                 self.slots.release(s)  # state cleared on re-admission
                 self._free_slot_blocks(s)
+                if self.adapters is not None:
+                    # stream the finish into the store's delayed-update
+                    # loop (host-side, between ticks)
+                    self.adapters.note_request(req)
 
     # --------------------------------------------------- retirement paths
     def cancel(self, uid) -> bool:
@@ -362,7 +394,7 @@ class ContinuousBatcher:
         """The pre-scheduler admission gulp: run every newly admitted
         prompt to completion in ceil(max_prompt_len / C) dispatches and
         emit each request's first generated token."""
-        task_ids = jnp.asarray(self.slots.task_ids())
+        task_ids = jnp.asarray(self.slots.task_ids(self._null_task))
         reset = np.zeros(self.num_slots, bool)
         reset[newly] = True
         maxlen = max(len(self.slots.reqs[s].tokens) for s in newly)
@@ -398,6 +430,7 @@ class ContinuousBatcher:
                 self.params, jnp.asarray(tokens), task_ids, self.caches,
                 jnp.asarray(self.pos), jnp.asarray(valid),
                 jnp.asarray(reset), extras, self._block_tables(),
+                self._adapter_tree(),
             )
             self.prefill_dispatches += 1
             self.slots.set_positions(positions)
@@ -432,9 +465,9 @@ class ContinuousBatcher:
             )
         next_tok, step_logits, self.caches = self._tick_fn(
             self.params, jnp.asarray(tokens),
-            jnp.asarray(self.slots.task_ids()),
+            jnp.asarray(self.slots.task_ids(self._null_task)),
             self.caches, jnp.asarray(self.pos), jnp.asarray(live),
-            self._block_tables(),
+            self._block_tables(), self._adapter_tree(),
         )
         self.ticks += 1
         self.decode_dispatches += 1
@@ -502,9 +535,9 @@ class ContinuousBatcher:
             }
         last, self.caches, positions = self._prefill_fn(
             self.params, jnp.asarray(tokens),
-            jnp.asarray(self.slots.task_ids()), self.caches,
+            jnp.asarray(self.slots.task_ids(self._null_task)), self.caches,
             jnp.asarray(self.pos), jnp.asarray(valid), jnp.asarray(reset),
-            extras, self._block_tables(),
+            extras, self._block_tables(), self._adapter_tree(),
         )
         self.ticks += 1
         self.mixed_dispatches += 1

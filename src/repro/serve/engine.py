@@ -65,6 +65,9 @@ class ServeEngine:
     # "parallel" (one dispatch computes the whole chunk) or "scan" (the
     # per-token oracle) — see repro.serve.step.make_serve_step
     prefill_mode: str = "parallel"
+    # optional repro.serve.adapters.TaskAdapterStore: serve graph-mixed
+    # per-task adapters gathered by each row's task id
+    adapters: Any = None
 
     def generate(
         self,
@@ -96,6 +99,13 @@ class ServeEngine:
         task_ids = np.asarray(
             prompt_batch.get("task_ids", np.zeros(b, np.int32)), np.int32
         )
+        num_tasks = self.model.cfg.num_tasks
+        bad = [int(t) for t in task_ids if not 0 <= t < num_tasks]
+        if bad:
+            raise ValueError(
+                f"task_ids {bad} outside [0, {num_tasks}) — jnp.take would "
+                "silently clamp them to another task's parameters"
+            )
 
         sample_fn = None
         if temperature > 0.0:
@@ -112,7 +122,7 @@ class ServeEngine:
             self.model, self.params, num_slots=b, max_seq=self.max_seq,
             prefill_chunk=self.prefill_chunk, paging=self.paging,
             prefill_mode=self.prefill_mode, on_token=stream,
-            sample_fn=sample_fn,
+            sample_fn=sample_fn, adapters=self.adapters,
         )
         vlm = self.model.cfg.input_mode == "vlm"
         for i, uid in enumerate(uids):

@@ -50,10 +50,15 @@ class SlotMap:
         """[(slot, request)] for every bound slot, in slot order."""
         return [(s, r) for s, r in enumerate(self.reqs) if r is not None]
 
-    def task_ids(self) -> np.ndarray:
-        """(num_slots,) int32 task ids; unbound slots ride along as task 0."""
+    def task_ids(self, null_task: int = 0) -> np.ndarray:
+        """(num_slots,) int32 task ids; unbound slots ride along as
+        ``null_task``. Adapter-serving executors pass ``num_tasks`` — the
+        serving tree's reserved ZERO row (same pattern as the null KV
+        block) — so dead lanes gather exact-zero adapters instead of task
+        0's."""
         return np.array(
-            [r.task_id if r is not None else 0 for r in self.reqs], np.int32
+            [r.task_id if r is not None else null_task for r in self.reqs],
+            np.int32,
         )
 
     def slot_of(self, uid) -> int | None:

@@ -141,11 +141,11 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
     cfg = model.cfg
 
     def decode_tick(params, tokens, task_ids, caches, positions, live,
-                    block_tables=None):
+                    block_tables=None, adapters=None):
         batch = make_step_batch(cfg, tokens, task_ids)
         logits, new_caches = model.decode_step(
             params, batch, caches, positions, live=live,
-            block_tables=block_tables,
+            block_tables=block_tables, adapters=adapters,
         )
         step_logits = logits[:, 0]  # (B, [K,] V)
         next_tok = jnp.argmax(step_logits, axis=-1)
@@ -153,7 +153,7 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
 
     def prefill_chunk_parallel(
         params, tokens, task_ids, caches, positions, valid, reset, extras,
-        block_tables=None,
+        block_tables=None, adapters=None,
     ):
         b = tokens.shape[0]
         caches = model.reset_slot_state(caches, reset, max_seq, paging)
@@ -162,7 +162,7 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
         # [K,] V) — the lm head never materializes the (B, C, V) slab
         logits, caches = model.prefill_step(
             params, batch, caches, positions, valid,
-            block_tables=block_tables,
+            block_tables=block_tables, adapters=adapters,
         )
         last = logits[:, 0]
         # slots with no valid token in this chunk report zeros — callers
@@ -174,7 +174,7 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
 
     def prefill_chunk_scan(
         params, tokens, task_ids, caches, positions, valid, reset, extras,
-        block_tables=None,
+        block_tables=None, adapters=None,
     ):
         b = tokens.shape[0]
         # restore (re)admitted slots' per-slot state to the pristine
@@ -191,7 +191,7 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
             batch = make_step_batch(cfg, tok, task_ids, extras=ext)
             logits, caches = model.decode_step(
                 params, batch, caches, positions, live=vld,
-                block_tables=block_tables,
+                block_tables=block_tables, adapters=adapters,
             )
             step = logits[:, 0]
             keep = vld.reshape((-1,) + (1,) * (step.ndim - 1))

@@ -92,6 +92,105 @@ def test_graph_mix_row_stochastic_preserves_constants():
     np.testing.assert_allclose(np.asarray(got), 3.25, rtol=1e-5)
 
 
+# --------------------------------------- graph_mix vs TaskGraph mixing families
+def _mixing_cases(m=12):
+    """The three mixing families on a band graph + the complete graph."""
+    from repro.core import complete_graph
+
+    band, comp = band_graph(m, 2), complete_graph(m)
+    return {
+        "bsr": band.bsr_mixing(eta=0.5, tau=2.0, alpha=1.0),
+        "bol": band.bol_mixing(eta=0.5, tau=2.0, alpha=0.05),
+        "consensus": band.consensus_mixing(),
+        "consensus_complete": comp.consensus_mixing(),
+    }
+
+
+def test_mixing_matrix_row_sums():
+    """Structural properties the serving store relies on: bsr(alpha=1) rows
+    sum to 1 (M^-1 of a matrix with unit row sums), bol rows sum to
+    1 - alpha*eta, consensus is doubly stochastic (symmetric, unit rows)."""
+    cases = _mixing_cases()
+    np.testing.assert_allclose(cases["bsr"].sum(axis=1), 1.0, atol=1e-8)
+    np.testing.assert_allclose(
+        cases["bol"].sum(axis=1), 1.0 - 0.05 * 0.5, atol=1e-8
+    )
+    for key in ("consensus", "consensus_complete"):
+        mu = cases[key]
+        np.testing.assert_allclose(mu.sum(axis=1), 1.0, atol=1e-8)
+        np.testing.assert_allclose(mu, mu.T, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", ["bsr", "bol", "consensus"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_mix_matches_mixing_families(name, dtype):
+    """Kernel parity against the einsum oracle under every REAL mixing
+    matrix (not just random mu), in f32 and bf16."""
+    mu = jnp.asarray(_mixing_cases()[name], jnp.float32)
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(rng.standard_normal((12, 384))).astype(dtype)
+    got = graph_mix_pallas(mu, theta, interpret=True)
+    want = graph_mix_reference(mu, theta)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_graph_mix_consensus_fixed_point():
+    """Doubly-stochastic consensus weights: the uniform average is a fixed
+    point, and on the COMPLETE graph one application of ``I - L/lam_max ==
+    J/m`` collapses ANY stack straight to that fixed point."""
+    cases = _mixing_cases()
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(rng.standard_normal((12, 256)), jnp.float32)
+    mean = jnp.mean(theta, axis=0, keepdims=True)
+    # mean stack is invariant under any doubly-stochastic mixing
+    mu = jnp.asarray(cases["consensus"], jnp.float32)
+    got = graph_mix_pallas(mu, jnp.broadcast_to(mean, theta.shape),
+                           interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.broadcast_to(mean, theta.shape)),
+        atol=1e-5,
+    )
+    # complete graph: one mix == the consensus projection itself
+    mu_c = jnp.asarray(cases["consensus_complete"], jnp.float32)
+    got_c = graph_mix_pallas(mu_c, theta, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got_c), np.asarray(jnp.broadcast_to(mean, theta.shape)),
+        atol=1e-5,
+    )
+
+
+def test_graph_mix_tree_matches_leafwise_reference():
+    """The batched tree op (dtype-grouped concat -> one kernel call ->
+    split/reshape) must equal mixing each leaf independently, across mixed
+    dtypes and arbitrary trailing shapes."""
+    from repro.kernels import graph_mix_tree, graph_mix_tree_reference
+
+    m = 12
+    mu = jnp.asarray(_mixing_cases(m)["bsr"], jnp.float32)
+    rng = np.random.default_rng(11)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((m, 3, 8, 4)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((m, 50)), jnp.bfloat16),
+        "c": [jnp.asarray(rng.standard_normal((m, 2, 7)), jnp.float32)],
+    }
+    got = graph_mix_tree(mu, tree)
+    want = graph_mix_tree_reference(mu, tree)
+    for g, w in zip(
+        jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)
+    ):
+        assert g.shape == w.shape and g.dtype == w.dtype
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            rtol=3e-2, atol=3e-2,
+        )
+    with pytest.raises(ValueError, match="task-leading"):
+        graph_mix_tree(mu, {"bad": jnp.zeros((m + 1, 4))})
+
+
 # ------------------------------------------------------- decode_attention
 @pytest.mark.parametrize("kvh,g", [(1, 4), (2, 8), (8, 1), (4, 4)])
 @pytest.mark.parametrize("s,block_s", [(256, 128), (512, 256), (300, 128)])

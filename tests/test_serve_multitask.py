@@ -1,0 +1,318 @@
+"""Graph-mixed per-task adapter serving (``repro.serve.adapters``).
+
+Pins the ISSUE 7 acceptance criteria:
+
+* zero-adapter parity — serving with an all-zero ``TaskAdapterStore`` is
+  token-for-token identical to serving without one (dense + paged);
+* consensus collapse — ``consensus_mixing`` on the complete graph is
+  exactly ``J/m``, so ONE mix drives every task's served adapters
+  identical (the paper's single-task limit);
+* O(1) dispatches — mixed-task batches keep one jitted dispatch per tick
+  and never retrace when adapter VALUES change between ticks;
+* admission validation — out-of-range ``task_id`` is rejected at submit()
+  and by ``ServeEngine.generate`` (jnp.take would silently misroute it);
+* dead lanes gather the serving tree's reserved ZERO null row
+  (``SlotMap.task_ids(null_task)`` freeze test);
+* the delayed-update loop (ring buffer, bounded delay, per-task grads)
+  follows ``repro.core.delayed`` semantics.
+
+``SERVE_TEST_ATTN_BACKEND=pallas`` re-runs the model-driven tests on the
+flash kernels (scripts/ci.sh exercises both backends).
+"""
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core.graph import complete_graph, disconnected_graph, ring_graph
+from repro.kernels import graph_mix_tree_reference
+from repro.models import TransformerLM
+from repro.serve import (
+    ContinuousBatcher,
+    PagingSpec,
+    Request,
+    ServeEngine,
+    SlotMap,
+    TaskAdapterStore,
+)
+
+BACKEND = os.environ.get("SERVE_TEST_ATTN_BACKEND", "jnp")
+MAX_SEQ = 32
+
+
+@functools.lru_cache(maxsize=None)
+def _built():
+    cfg = dataclasses.replace(
+        get("multitask_lm", smoke=True), attn_backend=BACKEND
+    )
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batch(cfg, b=4, s0=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": rng.integers(1, cfg.vocab_size, (b, s0)).astype(np.int32),
+        "task_ids": (np.arange(b) % cfg.num_tasks).astype(np.int32),
+    }
+
+
+# ---------------------------------------------------------- zero-adapter parity
+@pytest.mark.parametrize("paged", [False, True])
+def test_zero_adapter_parity(paged):
+    """An all-zero store must serve token-for-token what no store serves:
+    zero low-rank deltas add exact IEEE +0.0 everywhere."""
+    cfg, model, params = _built()
+    paging = (
+        PagingSpec.sized(8, MAX_SEQ, pool_tokens=8 * MAX_SEQ) if paged else None
+    )
+    batch = _batch(cfg)
+    base = ServeEngine(model, params, max_seq=MAX_SEQ, paging=paging).generate(
+        batch, 5
+    )
+    store = TaskAdapterStore(model, ring_graph(cfg.num_tasks), mixing="bsr")
+    with_store = ServeEngine(
+        model, params, max_seq=MAX_SEQ, paging=paging, adapters=store
+    ).generate(batch, 5)
+    assert np.array_equal(base, with_store)
+
+
+def test_nonzero_adapters_change_output_and_differentiate_tasks():
+    """Sanity that the adapters actually reach the math: random per-task
+    factors change the served tokens, and with identity mixing
+    (disconnected graph) two requests with the SAME prompt but different
+    task ids decode different continuations."""
+    cfg, model, params = _built()
+    batch = _batch(cfg)
+    base = ServeEngine(model, params, max_seq=MAX_SEQ).generate(batch, 5)
+    store = TaskAdapterStore(
+        model, disconnected_graph(cfg.num_tasks), mixing="bsr"
+    )
+    store.randomize(scale=0.1)
+    eng = ServeEngine(model, params, max_seq=MAX_SEQ, adapters=store)
+    out = eng.generate(batch, 5)
+    assert not np.array_equal(base, out)
+    same_prompt = {
+        "tokens": np.tile(batch["tokens"][:1], (2, 1)),
+        "task_ids": np.array([0, 1], np.int32),
+    }
+    per_task = eng.generate(same_prompt, 5)
+    assert not np.array_equal(per_task[0], per_task[1])
+
+
+# ------------------------------------------------------------ consensus limit
+def test_consensus_mixing_collapses_to_single_task():
+    """On the complete graph ``consensus_mixing`` is exactly ``J/m``: one
+    mix makes every task's SERVED adapters identical (within fp tolerance)
+    — the paper's single-task consensus limit — and mixed-task batches
+    then decode the same tokens regardless of task id."""
+    cfg, model, params = _built()
+    m = cfg.num_tasks
+    store = TaskAdapterStore(model, complete_graph(m), mixing="consensus")
+    store.randomize(scale=0.1)
+    for leaf in jax.tree_util.tree_leaves(store.serving):
+        np.testing.assert_allclose(
+            np.asarray(leaf[:m], np.float32),
+            np.broadcast_to(np.asarray(leaf[0], np.float32), leaf[:m].shape),
+            atol=1e-5,
+        )
+    # same prompt under different task ids -> identical continuations
+    batch = {
+        "tokens": np.tile(_batch(cfg)["tokens"][:1], (3, 1)),
+        "task_ids": np.array([0, 3, 7], np.int32),
+    }
+    out = ServeEngine(
+        model, params, max_seq=MAX_SEQ, adapters=store
+    ).generate(batch, 5)
+    assert np.array_equal(out[0], out[1])
+    assert np.array_equal(out[0], out[2])
+
+
+# ----------------------------------------------------- store mixing numerics
+def test_store_serving_matches_reference_mixing():
+    """``serving[:m]`` must equal the leafwise einsum oracle applied to the
+    raw store, and the appended null row must be exactly zero."""
+    cfg, model, params = _built()
+    m = cfg.num_tasks
+    store = TaskAdapterStore(
+        model, ring_graph(m), mixing="bol", eta=0.3, tau=0.5, alpha=0.1
+    )
+    store.randomize(scale=0.5)
+    ref = graph_mix_tree_reference(store.mu, store.raw)
+    for got, want in zip(
+        jax.tree_util.tree_leaves(store.serving),
+        jax.tree_util.tree_leaves(ref),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(got[:m], np.float32),
+            np.asarray(want, np.float32),
+            atol=1e-5,
+        )
+        assert (np.asarray(got[m]) == 0).all()
+
+
+# --------------------------------------------------------- O(1) dispatching
+def test_mixed_task_batch_keeps_o1_dispatches_and_traces_once():
+    """A mixed-task batch with live adapters must cost exactly one jitted
+    dispatch per decode tick, and adapter VALUE swaps between ticks
+    (update_every=1 re-mixes after every finish) must never retrace."""
+    cfg, model, params = _built()
+    store = TaskAdapterStore(
+        model, ring_graph(cfg.num_tasks), mixing="bsr", update_every=1
+    )
+    store.randomize(scale=0.05)
+    # max_seq=29 is used by no other test: make_serve_step memoizes on
+    # (model, max_seq, ...), so this step pair's jit cache starts empty
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=29, prefill_chunk=4,
+        adapters=store,
+    )
+    rng = np.random.default_rng(1)
+    for i, (n, mn) in enumerate(((5, 4), (7, 6), (3, 3))):
+        batcher.submit(Request(
+            uid=i,
+            tokens=rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+            max_new=mn,
+            task_id=i % cfg.num_tasks,
+        ))
+    batcher.run()
+    assert batcher.decode_dispatches == batcher.ticks
+    assert store.updates >= 1  # finishes streamed into the update loop
+    assert batcher._tick_fn._cache_size() == 1
+    assert batcher._prefill_fn._cache_size() == 1
+
+
+# ------------------------------------------------------ admission validation
+def test_submit_rejects_out_of_range_task_id():
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=4
+    )
+    tokens = np.arange(4, dtype=np.int32) + 1
+    for bad in (-1, cfg.num_tasks, cfg.num_tasks + 5):
+        with pytest.raises(ValueError, match="task_id"):
+            batcher.submit(
+                Request(uid=bad, tokens=tokens, max_new=2, task_id=bad)
+            )
+    batcher.submit(  # boundary ids are fine
+        Request(uid=100, tokens=tokens, max_new=2, task_id=cfg.num_tasks - 1)
+    )
+
+
+def test_engine_rejects_out_of_range_task_ids():
+    cfg, model, params = _built()
+    batch = _batch(cfg)
+    batch["task_ids"] = np.array([0, 1, cfg.num_tasks, 2], np.int32)
+    with pytest.raises(ValueError, match="task_ids"):
+        ServeEngine(model, params, max_seq=MAX_SEQ).generate(batch, 2)
+
+
+def test_store_rejects_mismatched_graph_and_rank():
+    cfg, model, params = _built()
+    with pytest.raises(ValueError, match="tasks"):
+        TaskAdapterStore(model, ring_graph(cfg.num_tasks + 1))
+    with pytest.raises(ValueError, match="rank"):
+        TaskAdapterStore(model, ring_graph(cfg.num_tasks), rank=0)
+    with pytest.raises(ValueError, match="adapter store serves"):
+        ContinuousBatcher(
+            model, params, num_slots=2, max_seq=MAX_SEQ,
+            adapters=TaskAdapterStore(
+                TransformerLM(dataclasses.replace(cfg, num_tasks=4)),
+                ring_graph(4), rank=2,
+            ),
+        )
+
+
+# ------------------------------------------------------- dead-lane null row
+def test_dead_slots_route_to_null_adapter_row():
+    """Freeze test: unbound slots map to ``null_task`` — the serving
+    tree's reserved zero row — not to task 0's adapters."""
+    slots = SlotMap(4)
+    req = Request(uid=0, tokens=np.array([1, 2], np.int32), max_new=1)
+    slots.bind(2, req)
+    np.testing.assert_array_equal(
+        slots.task_ids(null_task=7), np.array([7, 7, 0, 7], np.int32)
+    )
+    # default stays 0 — adapter-less callers keep the old behavior
+    np.testing.assert_array_equal(
+        slots.task_ids(), np.array([0, 0, 0, 0], np.int32)
+    )
+    # and the batcher wires its null id to num_tasks
+    cfg, model, params = _built()
+    batcher = ContinuousBatcher(model, params, num_slots=2, max_seq=MAX_SEQ)
+    assert batcher._null_task == cfg.num_tasks
+    # the null row survives randomize + update: ALWAYS exact zeros
+    store = TaskAdapterStore(model, ring_graph(cfg.num_tasks), mixing="bsr")
+    store.randomize(scale=1.0)
+    store.update()
+    for leaf in jax.tree_util.tree_leaves(store.serving):
+        assert (np.asarray(leaf[cfg.num_tasks]) == 0).all()
+
+
+# ------------------------------------------------------------ delayed updates
+def test_delayed_update_ring_buffer_and_grad_step():
+    """Identity mixing (disconnected graph, bsr alpha=1) isolates the
+    gradient step: update() must apply ``raw <- raw - lr * grads`` to the
+    pushed task only, and the history ring must stay bounded by Gamma+1."""
+    cfg, model, params = _built()
+    store = TaskAdapterStore(
+        model, disconnected_graph(cfg.num_tasks), mixing="bsr",
+        lr=0.5, max_delay=2,
+    )
+    g = store.zeros_like_task()
+    g["task"]["head_bias"] = jnp.ones_like(g["task"]["head_bias"])
+    before = np.asarray(store.raw["task"]["head_bias"])
+    store.push_grads(3, g)
+    store.update()
+    after = np.asarray(store.raw["task"]["head_bias"])
+    np.testing.assert_allclose(after[3], before[3] - 0.5, atol=1e-6)
+    others = [t for t in range(cfg.num_tasks) if t != 3]
+    np.testing.assert_allclose(after[others], before[others], atol=1e-6)
+    # grads are consumed: a second update with no new pushes is a pure mix
+    store.update()
+    np.testing.assert_allclose(
+        np.asarray(store.raw["task"]["head_bias"])[3], after[3], atol=1e-6
+    )
+    for _ in range(5):
+        store.update()
+    assert len(store._hist) == store.max_delay + 1
+    with pytest.raises(ValueError, match="task_id"):
+        store.push_grads(cfg.num_tasks, g)
+
+
+def test_fixed_delay_update_mixes_stale_iterates():
+    """fixed_delay pins every source at the delay bound: with identity
+    mixing and Gamma=1, an update must rebuild from the PREVIOUS iterate
+    in the ring — ignoring the newest — exactly ``per_source_stale``
+    semantics (one bounded delay per source task)."""
+    cfg, model, params = _built()
+    store = TaskAdapterStore(
+        model, disconnected_graph(cfg.num_tasks), mixing="bsr",
+        lr=0.5, max_delay=1, fixed_delay=True,
+    )
+    store.randomize(scale=0.1)  # hist reset to [R]
+    r_hb = np.asarray(store.raw["task"]["head_bias"])
+    g = store.zeros_like_task()
+    g["task"]["head_bias"] = jnp.ones_like(g["task"]["head_bias"])
+    store.push_grads(3, g)
+    store.update()  # bound 0 (hist had 1 entry): new = R - 0.5*e3
+    stepped = np.asarray(store.raw["task"]["head_bias"])
+    np.testing.assert_allclose(stepped[3], r_hb[3] - 0.5, atol=1e-6)
+    store.update()  # bound 1, fixed: mixes the STALE iterate R, not stepped
+    np.testing.assert_allclose(
+        np.asarray(store.raw["task"]["head_bias"]), r_hb, atol=1e-6
+    )
+
+
+def test_set_raw_validates_layout():
+    cfg, model, params = _built()
+    store = TaskAdapterStore(model, ring_graph(cfg.num_tasks))
+    bad = jax.tree.map(lambda t: t[:, None] if t.ndim == 2 else t, store.raw)
+    with pytest.raises(ValueError, match="set_raw"):
+        store.set_raw(bad)
