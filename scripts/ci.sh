@@ -2,6 +2,12 @@
 # Tier-1 verify: the green suite in one command (same as `make ci`).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# mechanized invariants FIRST (docs/analysis.md): AST lint R001-R005 +
+# jaxpr audit A001-A005 over the serving entry points; a rule violation
+# or a structural regression (retrace, hidden while loop, NaN-fill
+# gather, lost donation) fails the build before the test suite spends
+# minutes running. Writes ANALYSIS_report.json for artifact diffing.
+make lint
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # scheduler/executor layer once more with the flash kernels driving
 # attention (interpret mode on CPU): chunked interleaving parity,

@@ -1,0 +1,21 @@
+"""repro.analysis — mechanized correctness invariants for the serving stack.
+
+Two layers (see ``docs/analysis.md``):
+
+* **AST lint** (``repro.analysis.lint`` + ``repro.analysis.rules``) —
+  repo-specific source rules R001-R005, each born from a bug found by hand
+  in an earlier PR (NaN-fill gathers, ``-O``-stripped asserts, PRNG key
+  reuse, traced-bool branching, implicit dtype promotion).
+* **jaxpr audit** (``repro.analysis.jaxpr_audit``) — traces the real
+  serving entry points and walks the lowered programs: single trace per
+  entry point, zero per-token loops in parallel prefill, no fill-mode
+  gathers, no captured host constants, KV-buffer donation.
+
+CLI: ``python -m repro.analysis`` / ``make lint`` — exits non-zero on any
+non-suppressed finding and writes ``ANALYSIS_report.json`` for CI diffing.
+"""
+from repro.analysis.findings import Finding, active
+from repro.analysis.jaxpr_audit import run_audit
+from repro.analysis.lint import lint_paths, lint_source
+
+__all__ = ["Finding", "active", "lint_paths", "lint_source", "run_audit"]

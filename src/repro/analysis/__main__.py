@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs the AST lint over ``src/repro`` (or the given paths) and the jaxpr
+audit over the serving entry points, prints every finding, optionally
+writes a JSON report (``--json ANALYSIS_report.json`` in CI), and exits
+non-zero iff any non-suppressed finding remains. ``make lint`` wires this
+into ``scripts/ci.sh`` ahead of the test suite.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import Finding, active
+from repro.analysis.lint import lint_paths
+from repro.analysis.rules import ALL_RULES
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root three levels above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + jaxpr audit for the serving stack "
+                    "(docs/analysis.md)",
+    )
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the full report (incl. suppressed findings)")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--audit-only", action="store_true")
+    ap.add_argument("--skip-retrace", action="store_true",
+                    help="audit trace-time checks only (no serving runs)")
+    ap.add_argument("--backends", nargs="+", default=["jnp", "pallas"],
+                    choices=["jnp", "pallas"])
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.rule_id}  {rule.title}")
+        return 0
+
+    root = _repo_root()
+    findings: list[Finding] = []
+    report: dict = {}
+
+    if not args.audit_only:
+        targets = args.paths or [root / "src" / "repro"]
+        lint_findings = lint_paths(targets, root=root)
+        findings.extend(lint_findings)
+        report["lint"] = [f.to_dict() for f in lint_findings]
+
+    if not args.lint_only:
+        # imported lazily: the lint path must work even where jax is absent
+        from repro.analysis.jaxpr_audit import run_audit
+
+        audit_findings, audit_report = run_audit(
+            backends=tuple(args.backends), retrace=not args.skip_retrace,
+        )
+        findings.extend(audit_findings)
+        report["audit"] = {
+            "report": audit_report,
+            "findings": [f.to_dict() for f in audit_findings],
+        }
+
+    bad = active(findings)
+    report["summary"] = {
+        "findings": len(findings),
+        "active": len(bad),
+        "suppressed": len(findings) - len(bad),
+    }
+    for f in findings:
+        print(f.format())
+    if args.json is not None:
+        args.json.write_text(json.dumps(report, indent=2, sort_keys=True))
+        print(f"report written to {args.json}")
+    if bad:
+        print(f"FAILED: {len(bad)} non-suppressed finding(s)")
+        return 1
+    print(f"analysis clean ({report['summary']['suppressed']} suppressed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Finding: one diagnostic from the AST lint or the jaxpr audit.
+
+Both layers of ``repro.analysis`` (see ``docs/analysis.md``) report through
+this one type so the CLI, the JSON artifact (``ANALYSIS_report.json``) and
+the tests consume a single shape. ``suppressed`` findings are kept in the
+report (CI can diff what is being waived) but never fail the build.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # "R001".."R005" (AST lint) or "A001".."A005" (jaxpr audit)
+    path: str  # repo-relative file, or the audited entry-point name
+    line: int  # 1-based source line; 0 for whole-program audit findings
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        sup = "  [suppressed]" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{sup}"
+
+
+def active(findings: list[Finding]) -> list[Finding]:
+    """The findings that fail the build (non-suppressed)."""
+    return [f for f in findings if not f.suppressed]

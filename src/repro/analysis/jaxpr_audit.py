@@ -1,0 +1,362 @@
+"""Layer 2: jaxpr audit — trace the REAL serving entry points and walk the
+lowered programs for the invariants the AST lint cannot see.
+
+The AST lint (layer 1) reads source; this layer reads what jit actually
+builds. It traces the serving step pair from ``repro.serve.step`` (which
+wraps ``model.decode_step`` / ``model.prefill_step``), the attention ops'
+pos-flavor normalization, and ``graph_mix_tree``, then asserts:
+
+  A001  single trace per entry point — a real mini serving run must leave
+        exactly ONE entry in each jitted step's trace cache, and the
+        attention ops must absorb the whole host pos-flavor matrix
+        (python int / numpy scalar / () / (B,) device array) into one
+        trace. Retraces per tick were the PR 4 bug class.
+  A002  zero per-token loops in parallel prefill — the lowered parallel
+        prefill contains only the per-stage layer scan; a second
+        scan/while means a per-token decode loop crept back in
+        (generalizes the one-off count in tests/test_serve_prefill.py).
+  A003  no NaN-fill gathers — no ``gather`` eqn anywhere in a serving
+        program may carry ``GatherScatterMode.FILL_OR_DROP`` (the silent
+        jnp.take default that caused the PR 7 MoE-poisoning bug).
+        Scatters with drop semantics are fine: dropped writes are no-ops,
+        not NaNs.
+  A004  no implicit host constants — a large array baked into the traced
+        program as a constant means host data was captured by closure
+        instead of passed as an argument: a hidden host→device transfer
+        on every dispatch and a retrace hazard when the host value
+        changes.
+  A005  KV/adapter buffer donation — the cache pytree argument must be
+        donated (``tf.aliasing_output`` aliases in the lowered module) so
+        every tick updates the KV pools in place instead of doubling
+        peak memory.
+
+Run via ``python -m repro.analysis`` (see ``docs/analysis.md``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+_FILL = "FILL_OR_DROP"
+# iota/rope tables etc. are trace-time constants and tiny; anything bigger
+# than this many elements captured as a const is host data smuggled in
+_CONST_ELEMS_LIMIT = 4096
+_LOOP_PRIMS = ("while", "scan")
+
+
+# --------------------------------------------------------------- jaxpr walk
+def walk_eqns(jaxpr):
+    """Yield every eqn of a (Closed)Jaxpr, recursing into sub-jaxprs
+    (pjit/closed_call bodies, scan/while/cond branches, custom_* calls)."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            for v in vals:
+                if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                    yield from walk_eqns(v)
+
+
+def count_loops(jaxpr) -> int:
+    """scan + while eqns, recursively (lax.scan lowers to while in HLO;
+    at jaxpr level both primitives count as ONE sequential loop)."""
+    return sum(1 for e in walk_eqns(jaxpr) if e.primitive.name in _LOOP_PRIMS)
+
+
+def fill_gathers(jaxpr) -> list[str]:
+    """Human-readable descriptors of every NaN-fill gather in the program."""
+    hits = []
+    for eqn in walk_eqns(jaxpr):
+        if eqn.primitive.name != "gather":
+            continue
+        mode = eqn.params.get("mode")
+        if mode is not None and _FILL in str(mode):
+            shape = getattr(eqn.outvars[0].aval, "shape", None)
+            hits.append(f"gather->{shape} mode={mode}")
+    return hits
+
+
+def big_consts(closed_jaxpr) -> list[str]:
+    hits = []
+    for const in getattr(closed_jaxpr, "consts", []):
+        size = getattr(const, "size", 0)
+        if size and size > _CONST_ELEMS_LIMIT:
+            hits.append(
+                f"const {getattr(const, 'shape', '?')} "
+                f"{getattr(const, 'dtype', '?')} ({size} elems)"
+            )
+    return hits
+
+
+def donated_inputs(lowered_text: str) -> int:
+    """Number of input buffers the compiled module aliases to outputs."""
+    return lowered_text.count("tf.aliasing_output")
+
+
+# ------------------------------------------------------------- entry points
+def _smoke_model(arch: str, backend: str):
+    import dataclasses
+
+    import jax
+    from repro.configs import get
+    from repro.models.model import TransformerLM
+
+    cfg = dataclasses.replace(get(arch, smoke=True), attn_backend=backend)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _step_args(cfg, model, params, max_seq, *, chunk=4, paging=None):
+    import jax.numpy as jnp
+
+    b = 2
+    caches = model.init_cache(b, max_seq, paging)
+    if paging is not None:
+        bt = jnp.zeros((b, paging.max_blocks_per_slot), jnp.int32)
+    else:
+        bt = None
+    decode = (
+        params, jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
+        caches, jnp.zeros((b,), jnp.int32), jnp.ones((b,), bool), bt, None,
+    )
+    prefill = (
+        params, jnp.zeros((b, chunk), jnp.int32), jnp.zeros((b,), jnp.int32),
+        caches, jnp.zeros((b,), jnp.int32), jnp.ones((b, chunk), bool),
+        jnp.zeros((b,), bool), {}, bt, None,
+    )
+    return decode, prefill, caches
+
+
+def audit_step_pair(arch: str, backend: str, max_seq: int,
+                    paging=None) -> tuple[list[Finding], dict]:
+    """Structural audit (A002/A003/A004/A005) of one traced step pair."""
+    import jax
+    from repro.serve.step import make_serve_step
+
+    cfg, model, params = _smoke_model(arch, backend)
+    layout = "paged" if paging is not None else "dense"
+    findings: list[Finding] = []
+    report: dict = {}
+
+    decode_args, prefill_args, caches = _step_args(
+        cfg, model, params, max_seq, paging=paging
+    )
+    tick, prefill = make_serve_step(model, max_seq, paging, "parallel")
+    _, prefill_scan = make_serve_step(model, max_seq, paging, "scan")
+
+    entries = {
+        f"decode_tick[{backend},{layout}]": (tick, decode_args),
+        f"prefill_chunk[{backend},{layout},parallel]": (prefill, prefill_args),
+    }
+    loop_counts = {}
+    for name, (fn, args) in entries.items():
+        closed = jax.make_jaxpr(fn)(*args)
+        lowered = fn.lower(*args).as_text()
+        loops = count_loops(closed)
+        fills = fill_gathers(closed)
+        consts = big_consts(closed)
+        donated = donated_inputs(lowered)
+        loop_counts[name] = loops
+        report[name] = {
+            "loops": loops, "fill_gathers": len(fills),
+            "big_consts": len(consts), "donated_inputs": donated,
+        }
+        for hit in fills:
+            findings.append(Finding(
+                rule="A003", path=name, line=0,
+                message=f"NaN-fill gather in the jitted program: {hit} — "
+                        "the jnp.take default mode survived into a serving "
+                        "entry point (PR 7 bug class)",
+            ))
+        for hit in consts:
+            findings.append(Finding(
+                rule="A004", path=name, line=0,
+                message=f"large captured constant: {hit} — host data was "
+                        "closed over instead of passed as an argument "
+                        "(hidden per-dispatch transfer + retrace hazard)",
+            ))
+        if donated < 1:
+            findings.append(Finding(
+                rule="A005", path=name, line=0,
+                message="no donated input buffers — the KV cache pytree "
+                        "(argnum 3) must alias its outputs or every tick "
+                        "doubles peak cache memory",
+            ))
+
+    # A002: the parallel prefill may contain ONLY the per-stage layer scan
+    # (+ cross-chunk recurrent scans on SSD/xLSTM archs); the per-token
+    # oracle must cost exactly one more nested loop. For the attention-only
+    # audit arch that pins parallel == 1, scan == 2.
+    par_name = f"prefill_chunk[{backend},{layout},parallel]"
+    scan_loops = count_loops(jax.make_jaxpr(prefill_scan)(*prefill_args))
+    report[par_name]["scan_mode_loops"] = scan_loops
+    if loop_counts[par_name] >= scan_loops:
+        findings.append(Finding(
+            rule="A002", path=par_name, line=0,
+            message=f"parallel prefill lowers to {loop_counts[par_name]} "
+                    f"loops but the per-token scan oracle has {scan_loops} "
+                    "— a per-token loop crept into the parallel path",
+        ))
+    if loop_counts[par_name] != 1:
+        findings.append(Finding(
+            rule="A002", path=par_name, line=0,
+            message=f"expected exactly 1 loop (the per-stage layer scan) in "
+                    f"the parallel prefill of attention-only arch {arch}, "
+                    f"found {loop_counts[par_name]}",
+        ))
+    if loop_counts[f"decode_tick[{backend},{layout}]"] != 1:
+        findings.append(Finding(
+            rule="A002", path=f"decode_tick[{backend},{layout}]", line=0,
+            message="decode tick must contain only the per-stage layer scan",
+        ))
+    return findings, report
+
+
+def audit_retrace(arch: str, backend: str, max_seq: int) -> tuple[list[Finding], dict]:
+    """A001: run a real staggered mini-workload through ContinuousBatcher
+    and require ONE trace per jitted step (varying batch content, prompt
+    lengths, live masks and slot reuse tick to tick)."""
+    from repro.serve.batching import ContinuousBatcher, Request
+
+    cfg, model, params = _smoke_model(arch, backend)
+    rng = np.random.default_rng(0)
+    batcher = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=max_seq, prefill_chunk=4
+    )
+    for i, (n, mn) in enumerate(((5, 3), (3, 4), (6, 2))):
+        batcher.submit(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+            max_new=mn,
+        ))
+    batcher.run()
+    traces = {
+        "decode": batcher._tick_fn._cache_size(),
+        "prefill": batcher._prefill_fn._cache_size(),
+    }
+    findings = [
+        Finding(
+            rule="A001", path=f"{name}[{backend}]", line=0,
+            message=f"{count} traces after a content-varying serving run — "
+                    "the step pair must trace exactly once (PR 4 bug class)",
+        )
+        for name, count in traces.items() if count != 1
+    ]
+    return findings, {f"{k}_traces[{backend}]": v for k, v in traces.items()}
+
+
+def audit_pos_flavors() -> tuple[list[Finding], dict]:
+    """A001 for the attention ops: the whole host pos-flavor matrix must
+    collapse to one trace per tensor shape (the ops normalize pos BEFORE
+    the jit boundary — repro.kernels.runtime.pos_vector)."""
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.prefill_attention.kernel import prefill_attention_pallas
+    from repro.kernels.prefill_attention.ops import prefill_attention
+
+    rng = np.random.default_rng(1)
+    b, s, kvh, g, cq, hd = 2, 32, 2, 2, 4, 16
+    h = kvh * g
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    q1 = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+    qc = jnp.asarray(rng.standard_normal((b, cq, h, hd)), jnp.float32)
+    flavors = [
+        3, np.int32(5), jnp.asarray(7, jnp.int32),
+        jnp.asarray([9, 2], jnp.int32), np.asarray([4, 11], np.int64),
+    ]
+    base = {
+        "decode_attention": decode_attention_pallas._cache_size(),
+        "prefill_attention": prefill_attention_pallas._cache_size(),
+    }
+    for pos in flavors:
+        decode_attention(q1, k, v, pos)
+        prefill_attention(qc, k, v, pos)
+    grew = {
+        "decode_attention":
+            decode_attention_pallas._cache_size() - base["decode_attention"],
+        "prefill_attention":
+            prefill_attention_pallas._cache_size() - base["prefill_attention"],
+    }
+    findings = [
+        Finding(
+            rule="A001", path=f"{name}(pos flavors)", line=0,
+            message=f"{n} new traces across the pos-flavor matrix (python "
+                    "int / np scalar / () / (B,) / i64) — pos must be "
+                    "normalized to one (B,) i32 aval before the jit "
+                    "boundary",
+        )
+        for name, n in grew.items() if n > 1
+    ]
+    return findings, {f"{k}_new_traces": v for k, v in grew.items()}
+
+
+def audit_graph_mix() -> tuple[list[Finding], dict]:
+    """graph_mix_tree must fuse the whole adapter tree into one kernel
+    dispatch per dtype group (and contain no fill gathers)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.graph_mix import graph_mix_tree
+
+    m = 4
+    mu = jnp.eye(m, dtype=jnp.float32)
+    tree = {
+        "a": jnp.zeros((m, 3, 5), jnp.float32),
+        "b": jnp.zeros((m, 7), jnp.float32),
+        "c": jnp.zeros((m, 2, 2), jnp.bfloat16),
+    }
+    closed = jax.make_jaxpr(lambda mu, t: graph_mix_tree(mu, t))(mu, tree)
+    calls = sum(
+        1 for e in walk_eqns(closed) if e.primitive.name == "pallas_call"
+    )
+    groups = 2  # f32 + bf16
+    findings = []
+    if calls != groups:
+        findings.append(Finding(
+            rule="A001", path="graph_mix_tree", line=0,
+            message=f"{calls} kernel dispatches for {groups} dtype groups — "
+                    "the tree mix must fuse to one graph_mix call per dtype",
+        ))
+    for hit in fill_gathers(closed):
+        findings.append(Finding(
+            rule="A003", path="graph_mix_tree", line=0,
+            message=f"NaN-fill gather in graph_mix_tree: {hit}",
+        ))
+    return findings, {"pallas_calls": calls, "dtype_groups": groups}
+
+
+# ------------------------------------------------------------------ driver
+def run_audit(
+    backends=("jnp", "pallas"),
+    arch: str = "olmo_1b",
+    max_seq: int = 24,
+    paged_block: int = 8,
+    retrace: bool = True,
+) -> tuple[list[Finding], dict]:
+    """Full audit across the backend x layout matrix. ``retrace=False``
+    skips the (slower) real serving runs and keeps only trace-time checks."""
+    from repro.serve.paging import PagingSpec
+
+    findings: list[Finding] = []
+    report: dict = {"arch": arch, "max_seq": max_seq, "entry_points": {},
+                    "retrace": {}}
+    spec = PagingSpec.sized(paged_block, max_seq, pool_tokens=max_seq * 4)
+    for backend in backends:
+        for paging in (None, spec):
+            f, r = audit_step_pair(arch, backend, max_seq, paging=paging)
+            findings.extend(f)
+            report["entry_points"].update(r)
+        if retrace:
+            f, r = audit_retrace(arch, backend, max_seq)
+            findings.extend(f)
+            report["retrace"].update(r)
+    f, r = audit_pos_flavors()
+    findings.extend(f)
+    report["pos_flavors"] = r
+    f, r = audit_graph_mix()
+    findings.extend(f)
+    report["graph_mix"] = r
+    return findings, report

@@ -1,0 +1,24 @@
+"""Rule registry for the AST lint layer.
+
+Adding a rule: write ``rNNN_short_name.py`` beside the existing ones with a
+class exposing ``rule_id`` / ``title`` / ``applies_to(path)`` /
+``check(tree, source, path)``, then append an instance here. Keep rule
+modules single-purpose — one hazard class per rule — and document the
+historical bug that motivated it in the module docstring (mirrored in
+``docs/analysis.md``).
+"""
+from repro.analysis.rules.r001_take_mode import TakeModeRule
+from repro.analysis.rules.r002_bare_assert import BareAssertRule
+from repro.analysis.rules.r003_key_reuse import KeyReuseRule
+from repro.analysis.rules.r004_traced_bool import TracedBoolRule
+from repro.analysis.rules.r005_dtype_promotion import DtypePromotionRule
+
+ALL_RULES = [
+    TakeModeRule(),
+    BareAssertRule(),
+    KeyReuseRule(),
+    TracedBoolRule(),
+    DtypePromotionRule(),
+]
+
+RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

@@ -1,0 +1,71 @@
+"""Shared AST helpers for the lint rules.
+
+Every rule is a module-level class with
+
+    rule_id : str          e.g. "R001"
+    title   : str          one-line summary for --list-rules
+    def applies_to(self, path: str) -> bool
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]
+
+registered in ``repro.analysis.rules.ALL_RULES``. Rules never read files —
+the driver (``repro.analysis.lint``) parses once and owns suppressions, so
+rules only decide whether a node is a hazard.
+"""
+from __future__ import annotations
+
+import ast
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``jnp.take`` / ``jax.random.split`` → the dotted string, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def call_name(call: ast.Call) -> str | None:
+    return dotted_name(call.func)
+
+
+def keyword_names(call: ast.Call) -> set[str]:
+    return {kw.arg for kw in call.keywords if kw.arg is not None}
+
+
+def get_keyword(call: ast.Call, name: str) -> ast.expr | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def is_literal_index(node: ast.expr) -> bool:
+    """Static indices (int literals, +-literals, tuples/lists of them) can
+    never be out of bounds at runtime without failing the first test run —
+    only runtime-computed indices need an explicit out-of-bounds mode."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, bool))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub, ast.UAdd)):
+        return is_literal_index(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_literal_index(e) for e in node.elts)
+    return False
+
+
+def contains_float_literal(node: ast.expr) -> bool:
+    """True if the expression mixes in a bare Python float literal (weak
+    f32) anywhere — ``x * 1.0``, ``0.5 * (a + b)``, ...  Literals inside
+    explicit casts (``jnp.float32(0.5)``, ``.astype(...)`` arguments) and
+    inside shape/axis keywords are the caller saying what they mean, so
+    calls are not descended into."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.Call):
+        return False
+    return any(
+        contains_float_literal(child)
+        for child in ast.iter_child_nodes(node)
+        if isinstance(child, ast.expr)
+    )

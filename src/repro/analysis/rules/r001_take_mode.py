@@ -1,0 +1,63 @@
+"""R001 — gathers must state their out-of-bounds semantics.
+
+``jnp.take`` / ``jnp.take_along_axis`` default to ``mode=None`` == FILL:
+out-of-bounds indices silently return NaN (floats) / an arbitrary fill
+(ints) under jit instead of raising. PR 7's worst bug was exactly this
+class — dead serving lanes carried the null-adapter task id one past the
+``params["task"]`` stacks, and the NaN-filled dead rows poisoned LIVE rows
+through the MoE dispatch's shared expert buffers. Any take whose indices
+are runtime-computed must pass an explicit ``mode=`` ("clip" when clamping
+is the intended recovery, "promise_in_bounds" when the surrounding code
+proves the bound — document which at the call site).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    call_name,
+    get_keyword,
+    is_literal_index,
+    keyword_names,
+)
+
+# jnp aliases seen in this repo; plain numpy raises on OOB so np.take is safe
+_TAKE_FNS = {
+    "jnp.take", "jnp.take_along_axis",
+    "jax.numpy.take", "jax.numpy.take_along_axis",
+}
+
+
+class TakeModeRule:
+    rule_id = "R001"
+    title = "jnp.take/take_along_axis with runtime indices needs explicit mode="
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]:
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name not in _TAKE_FNS:
+                continue
+            if "mode" in keyword_names(node):
+                continue
+            indices = get_keyword(node, "indices")
+            if indices is None and len(node.args) >= 2:
+                indices = node.args[1]
+            if indices is not None and is_literal_index(indices):
+                continue  # static index: can't go out of bounds silently
+            findings.append(Finding(
+                rule=self.rule_id, path=path, line=node.lineno,
+                message=(
+                    f"{name} without explicit mode= — the default is "
+                    "NaN/garbage FILL for out-of-bounds indices under jit "
+                    "(the PR 7 MoE-poisoning bug class); pass mode='clip' "
+                    "or mode='promise_in_bounds' and document why"
+                ),
+            ))
+        return findings

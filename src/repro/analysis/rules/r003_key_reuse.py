@@ -1,0 +1,177 @@
+"""R003 — a PRNG key must not feed two ``jax.random`` draws.
+
+JAX keys are pure values: drawing twice from the same key yields the SAME
+"random" numbers. PR 3 found exactly this in ``ServeEngine.generate``'s
+temperature path — the first sampled token of every request reused the
+caller's base key, correlating the first draw across requests. Every key
+must be consumed at most once; derive fresh keys with ``jax.random.split``
+/ ``fold_in`` between draws.
+
+The rule is a per-function, statement-order scope walk:
+
+  * passing a name as the key argument of a CONSUMING ``jax.random.*``
+    call (``normal``, ``randint``, ``categorical``, ...) marks it consumed;
+  * any assignment to the name (including ``k, sub = split(k)`` and loop
+    targets) clears it;
+  * a second consumption without an intervening rebind is a finding. Loop
+    bodies are walked twice, so a key consumed inside a ``for``/``while``
+    and never rebound in the body is caught (reuse across iterations);
+  * nested ``def``/``lambda`` are fresh scopes (their params are new keys).
+
+Deriving calls (``split``, ``fold_in``, ``clone``, ``key_data``) do not
+consume — deriving many streams from one parent key is the intended idiom.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import dotted_name
+
+# jax.random callables that CONSUME the key they are given
+_CONSUMERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "f", "gamma", "generalized_normal", "geometric",
+    "gumbel", "laplace", "loggamma", "logistic", "maxwell",
+    "multivariate_normal", "normal", "orthogonal", "pareto", "permutation",
+    "poisson", "rademacher", "randint", "rayleigh", "shuffle", "t",
+    "triangular", "truncated_normal", "uniform", "wald", "weibull_min",
+}
+
+
+def _random_fn(call: ast.Call) -> str | None:
+    """'randint' for ``jax.random.randint(...)`` / ``jrandom.randint``."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    parts = name.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jr"):
+        return parts[-1]
+    if len(parts) == 2 and parts[0] in ("jrandom", "jr"):
+        return parts[-1]
+    return None
+
+
+def _key_arg(call: ast.Call) -> ast.expr | None:
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return call.args[0] if call.args else None
+
+
+def _target_names(node: ast.AST) -> set[str]:
+    names: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store, ast.Del)):
+            names.add(n.id)
+    return names
+
+
+class KeyReuseRule:
+    rule_id = "R003"
+    title = "PRNG key consumed by more than one jax.random draw"
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]:
+        findings: dict[tuple, Finding] = {}
+
+        def scan_expr(expr: ast.expr, consumed: dict[str, int]) -> None:
+            """Visit calls in an expression; nested lambdas are new scopes
+            (their params are fresh keys per call, so the enclosing scope
+            must not see their consumptions — ast.walk would)."""
+            stack = [expr]
+            while stack:
+                node = stack.pop()
+                if isinstance(node, ast.Lambda):
+                    scan_expr(node.body, {})
+                    continue  # do NOT descend from the outer scope
+                stack.extend(ast.iter_child_nodes(node))
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = _random_fn(node)
+                if fn is None or fn not in _CONSUMERS:
+                    continue
+                key = _key_arg(node)
+                if not isinstance(key, ast.Name):
+                    continue  # fresh subexpression keys (split(k)[0], ...)
+                if key.id in consumed:
+                    k = (path, node.lineno, key.id)
+                    findings.setdefault(k, Finding(
+                        rule=self.rule_id, path=path, line=node.lineno,
+                        message=(
+                            f"PRNG key '{key.id}' already consumed by "
+                            f"jax.random at line {consumed[key.id]} — "
+                            "identical draws; split/fold_in a fresh subkey"
+                        ),
+                    ))
+                else:
+                    consumed[key.id] = node.lineno
+
+        def walk_stmts(stmts, consumed: dict[str, int]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    params = {a.arg for a in (
+                        stmt.args.posonlyargs + stmt.args.args
+                        + stmt.args.kwonlyargs
+                    )}
+                    scope_body(stmt.body, params)
+                    consumed.pop(stmt.name, None)
+                elif isinstance(stmt, ast.ClassDef):
+                    walk_stmts(stmt.body, {})
+                elif isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    if getattr(stmt, "value", None) is not None:
+                        scan_expr(stmt.value, consumed)
+                    targets = (
+                        stmt.targets if isinstance(stmt, ast.Assign)
+                        else [stmt.target]
+                    )
+                    for t in targets:
+                        for name in _target_names(t):
+                            consumed.pop(name, None)
+                elif isinstance(stmt, ast.If):
+                    scan_expr(stmt.test, consumed)
+                    before = dict(consumed)
+                    walk_stmts(stmt.body, consumed)
+                    other = dict(before)
+                    walk_stmts(stmt.orelse, other)
+                    consumed.update(other)
+                elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    scan_expr(stmt.iter, consumed)
+                    # two passes: the second simulates the next iteration,
+                    # catching keys consumed but never rebound in the body
+                    for _ in range(2):
+                        for name in _target_names(stmt.target):
+                            consumed.pop(name, None)
+                        walk_stmts(stmt.body, consumed)
+                    walk_stmts(stmt.orelse, consumed)
+                elif isinstance(stmt, ast.While):
+                    for _ in range(2):
+                        scan_expr(stmt.test, consumed)
+                        walk_stmts(stmt.body, consumed)
+                    walk_stmts(stmt.orelse, consumed)
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    for item in stmt.items:
+                        scan_expr(item.context_expr, consumed)
+                        if item.optional_vars is not None:
+                            for name in _target_names(item.optional_vars):
+                                consumed.pop(name, None)
+                    walk_stmts(stmt.body, consumed)
+                elif isinstance(stmt, ast.Try):
+                    walk_stmts(stmt.body, consumed)
+                    for h in stmt.handlers:
+                        walk_stmts(h.body, dict(consumed))
+                    walk_stmts(stmt.orelse, consumed)
+                    walk_stmts(stmt.finalbody, consumed)
+                else:
+                    for child in ast.iter_child_nodes(stmt):
+                        if isinstance(child, ast.expr):
+                            scan_expr(child, consumed)
+
+        def scope_body(stmts, params: set[str]) -> None:
+            walk_stmts(stmts, {})
+
+        walk_stmts(tree.body if isinstance(tree, ast.Module) else [tree], {})
+        return list(findings.values())

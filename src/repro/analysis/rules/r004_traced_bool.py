@@ -1,0 +1,189 @@
+"""R004 — no Python branching on traced values inside jitted functions.
+
+``if x > 0:`` / ``bool(x)`` / ``while x:`` on a traced array either raises
+a ConcretizationTypeError at trace time or — worse, when the value happens
+to be concrete during warmup — silently bakes ONE branch into the compiled
+program and retraces every time the host value changes. The serving loop's
+"zero retraces per tick" property (pinned since PR 4) dies exactly this
+way. Inside a jit boundary, data-dependent control flow must go through
+``jnp.where`` / ``lax.cond`` / ``lax.while_loop``.
+
+Scope: functions that are jit boundaries — decorated with ``jax.jit`` (or
+``functools.partial(jax.jit, ...)``), or passed by name to a ``jax.jit(f,
+...)`` call in the same module — plus any ``def`` nested inside them
+(scan/cond bodies receive traced operands too). Parameters named in
+``static_argnames`` / positions in ``static_argnums`` are exempt, as are
+host-level tests: ``x is None``, ``isinstance``, ``"k" in pytree``,
+``x.shape / ndim / dtype / size``, ``len(x)``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import dotted_name
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_HOST_FNS = {"len", "isinstance", "callable", "hasattr", "getattr", "type"}
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _jit_call_statics(call: ast.Call) -> tuple[set[str], set[int]]:
+    """static_argnames / static_argnums constants from a jit(...) call."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def _decorator_statics(dec: ast.expr) -> tuple[bool, set[str], set[int]]:
+    """(is_jit, static_argnames, static_argnums) for one decorator."""
+    if dotted_name(dec) in _JIT_NAMES:
+        return True, set(), set()
+    if isinstance(dec, ast.Call):
+        name = dotted_name(dec.func)
+        if name in _JIT_NAMES:
+            return (True, *_jit_call_statics(dec))
+        if name in _PARTIAL_NAMES and dec.args and \
+                dotted_name(dec.args[0]) in _JIT_NAMES:
+            return (True, *_jit_call_statics(dec))
+    return False, set(), set()
+
+
+class TracedBoolRule:
+    rule_id = "R004"
+    title = "Python bool()/if/while on traced values inside jitted functions"
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]:
+        # --- collect jit boundaries ------------------------------------
+        jitted: list[tuple[ast.FunctionDef, set[str], set[int]]] = []
+        wrapped: dict[str, tuple[set[str], set[int]]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and dotted_name(node.func) in _JIT_NAMES:
+                if node.args and isinstance(node.args[0], ast.Name):
+                    wrapped[node.args[0].id] = _jit_call_statics(node)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                is_jit, names, nums = _decorator_statics(dec)
+                if is_jit:
+                    jitted.append((node, names, nums))
+                    break
+            else:
+                if node.name in wrapped:
+                    names, nums = wrapped[node.name]
+                    jitted.append((node, names, nums))
+
+        findings: dict[tuple, Finding] = {}
+        for fn, static_names, static_nums in jitted:
+            pos = fn.args.posonlyargs + fn.args.args
+            traced = {
+                a.arg for i, a in enumerate(pos)
+                if a.arg not in static_names and i not in static_nums
+            }
+            traced |= {
+                a.arg for a in fn.args.kwonlyargs if a.arg not in static_names
+            }
+            self._scan(fn.body, traced, path, findings)
+        return list(findings.values())
+
+    # ------------------------------------------------------------------
+    def _scan(self, body, traced: set[str], path, findings) -> None:
+        for node in body:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if sub is not node:
+                        continue  # ast.walk visits it; handled below
+                if isinstance(sub, (ast.If, ast.While)):
+                    self._flag_test(sub.test, traced, path, findings,
+                                    kind=type(sub).__name__.lower())
+                elif isinstance(sub, ast.IfExp):
+                    self._flag_test(sub.test, traced, path, findings,
+                                    kind="conditional expression")
+                elif isinstance(sub, ast.Assert):
+                    self._flag_test(sub.test, traced, path, findings,
+                                    kind="assert")
+                elif isinstance(sub, ast.Call) and \
+                        dotted_name(sub.func) in ("bool", "int", "float") and \
+                        sub.args and self._offending(sub.args[0], traced):
+                    key = (path, sub.lineno, "cast")
+                    findings.setdefault(key, Finding(
+                        rule=self.rule_id, path=path, line=sub.lineno,
+                        message=(
+                            f"{dotted_name(sub.func)}() on a traced value "
+                            "inside a jitted function — concretizes the "
+                            "tracer (error or silent retrace per host "
+                            "value); use jnp.where/lax.cond"
+                        ),
+                    ))
+        # nested defs: their params carry traced operands (scan/cond bodies)
+        for node in body:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    inner = traced | {
+                        a.arg for a in (
+                            sub.args.posonlyargs + sub.args.args
+                            + sub.args.kwonlyargs
+                        )
+                    }
+                    # only one level of re-scan is needed: ast.walk above
+                    # already covered the statements; re-run the flagger
+                    # with the enriched traced set
+                    self._scan(sub.body, inner, path, findings)
+
+    def _flag_test(self, test, traced, path, findings, kind) -> None:
+        if self._offending(test, traced):
+            key = (path, test.lineno, kind)
+            findings.setdefault(key, Finding(
+                rule=self.rule_id, path=path, line=test.lineno,
+                message=(
+                    f"python `{kind}` branches on a traced value inside a "
+                    "jitted function — either a trace-time error or a "
+                    "retrace every time the host value changes (the "
+                    "zero-retraces-per-tick hazard); use jnp.where / "
+                    "lax.cond / lax.while_loop"
+                ),
+            ))
+
+    def _offending(self, node, traced: set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False  # shapes/dtypes are static under jit
+            return self._offending(node.value, traced)
+        if isinstance(node, ast.Call):
+            if dotted_name(node.func) in _HOST_FNS:
+                return False
+            return any(self._offending(a, traced) for a in node.args) or any(
+                self._offending(kw.value, traced) for kw in node.keywords
+            )
+        if isinstance(node, ast.Compare):
+            comparators = [node.left] + node.comparators
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and any(isinstance(c, ast.Constant) and c.value is None
+                            for c in comparators):
+                return False  # `x is None`: host-level structure check
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops):
+                return False  # pytree/dict membership is host-level
+            return any(self._offending(c, traced) for c in comparators)
+        if isinstance(node, (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        return any(
+            self._offending(child, traced)
+            for child in ast.iter_child_nodes(node)
+            if isinstance(child, ast.expr)
+        )

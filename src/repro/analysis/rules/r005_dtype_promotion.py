@@ -1,0 +1,70 @@
+"""R005 — dtype-promotion hazards in contraction operands.
+
+A bare Python float literal is weakly-typed f32: mixed into a bf16
+contraction operand (``jnp.einsum("...", x * 0.5, w)``) it silently
+promotes the whole operand to f32 — doubling the matmul's memory traffic
+and splitting the program into mixed-precision paths that drift from the
+bf16 reference — or, depending on where the literal lands, keeps the
+einsum in bf16 while the author believed the f32 literal had upgraded the
+accumulation. Either way the intent is ambiguous. Contractions that mix a
+float literal into an operand must state their accumulation dtype with an
+explicit ``preferred_element_type=`` (the repo idiom — see
+``models/layers.py::matmul``), or hoist the literal scaling outside the
+contraction.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    call_name,
+    contains_float_literal,
+    keyword_names,
+)
+
+_CONTRACTIONS = {
+    "jnp.einsum", "jax.numpy.einsum",
+    "jnp.matmul", "jax.numpy.matmul",
+    "jnp.dot", "jax.numpy.dot",
+    "jnp.tensordot", "jax.numpy.tensordot",
+    "jax.lax.dot_general", "lax.dot_general",
+    "jax.lax.dot", "lax.dot",
+}
+
+
+class DtypePromotionRule:
+    rule_id = "R005"
+    title = "float literal in contraction operand without preferred_element_type"
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]:
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name not in _CONTRACTIONS:
+                continue
+            if "preferred_element_type" in keyword_names(node):
+                continue
+            operands = node.args
+            if operands and isinstance(operands[0], ast.Constant) \
+                    and isinstance(operands[0].value, str):
+                operands = operands[1:]  # einsum subscript string
+            hot = [op for op in operands if contains_float_literal(op)]
+            if not hot:
+                continue
+            findings.append(Finding(
+                rule=self.rule_id, path=path, line=node.lineno,
+                message=(
+                    f"{name} mixes a weak f32 float literal into an "
+                    "operand without preferred_element_type= — the "
+                    "promotion (or its absence) is implicit; state the "
+                    "accumulation dtype or hoist the literal out of the "
+                    "contraction"
+                ),
+            ))
+        return findings

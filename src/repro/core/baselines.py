@@ -137,9 +137,16 @@ def sdca(
     def local_pass(a_dual, w, perm):
         def body(carry, j_idx):
             a_d, w_loc = carry
-            xj = jnp.take_along_axis(x, j_idx[:, None, None], axis=1)[:, 0]
-            yj = jnp.take_along_axis(y, j_idx[:, None], axis=1)[:, 0]
-            aj = jnp.take_along_axis(a_d, j_idx[:, None], axis=1)[:, 0]
+            # j_idx comes from jax.random.permutation over [0, n): in bounds
+            xj = jnp.take_along_axis(
+                x, j_idx[:, None, None], axis=1, mode="promise_in_bounds"
+            )[:, 0]
+            yj = jnp.take_along_axis(
+                y, j_idx[:, None], axis=1, mode="promise_in_bounds"
+            )[:, 0]
+            aj = jnp.take_along_axis(
+                a_d, j_idx[:, None], axis=1, mode="promise_in_bounds"
+            )[:, 0]
             pred = jnp.sum(w_loc * xj, axis=-1)
             xj_sq = jnp.sum(xj * xj, axis=-1)
             denom = 0.5 + sigma_prime * k_diag * xj_sq / n

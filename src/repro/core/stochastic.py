@@ -35,9 +35,12 @@ def minibatch_sampler(x: Array, y: Array) -> Sampler:
     n = x.shape[1]
 
     def sample(key: Array, b: int):
+        # randint(0, n) indices are in bounds by construction
         idx = jax.random.randint(key, (x.shape[0], b), 0, n)
-        xb = jnp.take_along_axis(x, idx[:, :, None], axis=1)
-        yb = jnp.take_along_axis(y, idx, axis=1)
+        xb = jnp.take_along_axis(
+            x, idx[:, :, None], axis=1, mode="promise_in_bounds"
+        )
+        yb = jnp.take_along_axis(y, idx, axis=1, mode="promise_in_bounds")
         return xb, yb
 
     return sample

@@ -239,8 +239,12 @@ def paged_cache_write(
     cross-slot collisions.
     """
     bs = pool.shape[1]
+    # mode="clip": a dead slot's stale pos can point past its table width;
+    # the clamped garbage id is immediately rerouted to the null block by
+    # the live mask below, whereas the NaN-fill default would turn it into
+    # an arbitrary int poisoning the scatter row (R001)
     bidx = jnp.take_along_axis(
-        block_tables, (pos // bs)[:, None], axis=1
+        block_tables, (pos // bs)[:, None], axis=1, mode="clip"
     )[:, 0]
     if live is not None:
         bidx = jnp.where(live, bidx, 0)
@@ -268,7 +272,10 @@ def paged_cache_write_slab(
     c = new.shape[1]
     tgt = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) logical positions
     blk = jnp.clip(tgt // bs, 0, block_tables.shape[1] - 1)
-    bidx = jnp.take_along_axis(block_tables, blk, axis=1)  # (B, C)
+    # blk is explicitly clipped to the table width on the line above
+    bidx = jnp.take_along_axis(
+        block_tables, blk, axis=1, mode="promise_in_bounds"
+    )  # (B, C)
     bidx = jnp.where(valid, bidx, 0)
     return pool.at[bidx, tgt % bs].set(new.astype(pool.dtype))
 

@@ -99,8 +99,12 @@ def mamba2_full(
         conv_tail = window[:, s : s + CONV_K - 1, :]
     else:
         n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        # n_valid <= S and window spans K-1+S rows, so idx <= S+K-2 is in
+        # bounds by construction
         idx = n_valid[:, None] + jnp.arange(CONV_K - 1)[None, :]
-        conv_tail = jnp.take_along_axis(window, idx[:, :, None], axis=1)
+        conv_tail = jnp.take_along_axis(
+            window, idx[:, :, None], axis=1, mode="promise_in_bounds"
+        )
     xbc = _causal_conv(xbc, params["conv_w"], prefix=conv_prefix)
     xs = xbc[..., :d_inner].reshape(bsz, s, nh, head_dim)
     b_in = xbc[..., d_inner : d_inner + d_state]  # (B, S, ds)

@@ -157,14 +157,17 @@ class TransformerLM:
     # ----------------------------------------------------------------- embed
     def _embed(self, params, batch) -> Array:
         c = self.cfg
+        # token ids come from untrusted callers: CLIP an out-of-vocab id to
+        # the last embedding row instead of the NaN-fill default, which
+        # would poison the whole row's activations (R001)
         if c.input_mode == "audio":
             toks = batch["tokens"]  # (B, S, K)
             x = sum(
-                jnp.take(params["embed"][k], toks[:, :, k], axis=0)
+                jnp.take(params["embed"][k], toks[:, :, k], axis=0, mode="clip")
                 for k in range(c.num_codebooks)
             )
         else:
-            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            x = jnp.take(params["embed"], batch["tokens"], axis=0, mode="clip")
             if c.input_mode == "vlm":
                 x = jnp.where(
                     batch["vision_mask"][..., None],
@@ -529,7 +532,10 @@ class TransformerLM:
         hit = jnp.any(onehot, axis=2)  # (B, S)
         src = jnp.argmax(onehot, axis=2)  # (B, S) chunk index per cache row
         idx = src.reshape(src.shape + (1,) * (new.ndim - 2))
-        val = jnp.take_along_axis(new, idx, axis=1)  # (B, S, ...)
+        # argmax over the (B, S, C) onehot is in [0, C-1] by construction
+        val = jnp.take_along_axis(
+            new, idx, axis=1, mode="promise_in_bounds"
+        )  # (B, S, ...)
         mask = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
         return jnp.where(mask, val.astype(cache.dtype), cache)
 
@@ -556,15 +562,22 @@ class TransformerLM:
         num_tasks + 1 with a terminal zero null row for dead lanes). Stage
         leaves (T, P, ...) -> (P, B, ...) so they scan alongside the
         period-stacked params; task leaves (T, ...) -> (B, ...)."""
+        # mode="clip", same rationale as _TAKE_MODE: dead lanes carry the
+        # null id num_tasks (the tree's terminal zero row — in bounds), and
+        # a corrupted id must clamp to SOME task's adapters rather than
+        # NaN-fill through the shared MoE buffers (the PR 7 bug)
         stage_ad = [
             jax.tree.map(
-                lambda t: jnp.moveaxis(jnp.take(t, task_ids, axis=0), 0, 1),
+                lambda t: jnp.moveaxis(
+                    jnp.take(t, task_ids, axis=0, mode="clip"), 0, 1
+                ),
                 stage,
             )
             for stage in adapters["stages"]
         ]
         task_ad = jax.tree.map(
-            lambda t: jnp.take(t, task_ids, axis=0), adapters["task"]
+            lambda t: jnp.take(t, task_ids, axis=0, mode="clip"),
+            adapters["task"],
         )
         return stage_ad, task_ad
 
@@ -875,7 +888,10 @@ class TransformerLM:
         # the (B, C, V) logits slab would be C x the largest matmul in the
         # model for rows that are immediately discarded
         n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        # max(n_valid - 1, 0) is in [0, C-1]: n_valid <= C by construction
         idx = jnp.maximum(n_valid - 1, 0)
-        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B,1,d)
+        x_last = jnp.take_along_axis(
+            x, idx[:, None, None], axis=1, mode="promise_in_bounds"
+        )  # (B,1,d)
         logits = self._logits(params, x_last, batch, task_ad)
         return logits, new_caches

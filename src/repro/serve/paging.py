@@ -50,9 +50,20 @@ class PagingSpec:
     max_blocks_per_slot: int
 
     def __post_init__(self):
-        assert self.block_size > 0
-        assert self.num_blocks >= 2, "need >= 1 allocatable block + null"
-        assert self.max_blocks_per_slot > 0
+        # typed errors, not asserts: these guard every downstream layout
+        # computation and must survive `python -O` (R002 — docs/analysis.md)
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be positive, got {self.block_size}")
+        if self.num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (>= 1 allocatable block + the "
+                f"reserved null block 0), got {self.num_blocks}"
+            )
+        if self.max_blocks_per_slot <= 0:
+            raise ValueError(
+                f"max_blocks_per_slot must be positive, got "
+                f"{self.max_blocks_per_slot}"
+            )
 
     @property
     def tokens_per_slot(self) -> int:
@@ -118,8 +129,15 @@ class BlockAllocator:
         for b in blocks:
             # fail fast on double-free / foreign ids: a block id reaching the
             # free list twice would later be handed to TWO live slots, whose
-            # KV writes would silently corrupt each other
-            assert 0 < b < self.spec.num_blocks, f"foreign block id {b}"
-            assert b not in self._free, f"double free of block {b}"
+            # KV writes would silently corrupt each other. Typed errors, not
+            # asserts — these invariants must survive `python -O` (R002).
+            if not 0 < b < self.spec.num_blocks:
+                raise RuntimeError(f"foreign block id {b}")
+            if b in self._free:
+                raise RuntimeError(f"double free of block {b}")
             self._free.append(b)
-        assert len(self._free) <= self.spec.num_blocks - 1
+        if len(self._free) > self.spec.num_blocks - 1:
+            raise RuntimeError(
+                f"free list holds {len(self._free)} blocks but only "
+                f"{self.spec.num_blocks - 1} are allocatable"
+            )

@@ -29,7 +29,10 @@ class SlotMap:
     """
 
     def __init__(self, num_slots: int):
-        assert num_slots > 0
+        # typed errors, not asserts: slot/allocator invariants must survive
+        # `python -O` (R002 — see docs/analysis.md)
+        if num_slots <= 0:
+            raise ValueError(f"num_slots must be positive, got {num_slots}")
         self.num_slots = num_slots
         self.pos = np.zeros(num_slots, np.int32)
         self.reqs: list = [None] * num_slots
@@ -70,7 +73,10 @@ class SlotMap:
 
     # ------------------------------------------------------------ updates
     def bind(self, slot: int, req) -> None:
-        assert self.reqs[slot] is None, f"slot {slot} already bound"
+        if self.reqs[slot] is not None:
+            # binding over a live request would silently interleave two
+            # requests' tokens through one cache stripe
+            raise RuntimeError(f"slot {slot} already bound")
         self.reqs[slot] = req
         self.pos[slot] = 0
 
@@ -78,7 +84,8 @@ class SlotMap:
         """Unbind and return the slot's request (position left as-is — the
         next ``bind`` zeroes it and the reset flag clears cache state)."""
         req = self.reqs[slot]
-        assert req is not None, f"slot {slot} is not bound"
+        if req is None:
+            raise RuntimeError(f"slot {slot} is not bound")
         self.reqs[slot] = None
         return req
 

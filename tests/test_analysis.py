@@ -1,0 +1,436 @@
+"""Tests for repro.analysis: the AST lint rules (R001-R005, each with a
+positive, a negative, and a suppression case), the jaxpr-audit walkers
+(re-pinning the PR 7 NaN-fill gather and the PR 4 single-trace property
+through the NEW machinery instead of bespoke test code), and the CLI
+contract (non-zero exit + correct rule id on seeded regressions).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.findings import active
+from repro.analysis.lint import collect_suppressions, lint_source
+
+SRC = "src/repro/core/example.py"  # default lint path (no R002 scoping)
+SERVE = "src/repro/serve/example.py"
+KERNELS = "src/repro/kernels/example/kernel.py"
+
+
+def rules_of(findings, only_active=True):
+    fs = active(findings) if only_active else findings
+    return [f.rule for f in fs]
+
+
+def lint(snippet: str, path: str = SRC):
+    return lint_source(textwrap.dedent(snippet), path)
+
+
+# ------------------------------------------------------------------- R001
+def test_r001_flags_modeless_take_on_runtime_indices():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(params, task_ids):
+            return jnp.take(params, task_ids, axis=0)
+    """)
+    assert rules_of(fs) == ["R001"]
+
+
+def test_r001_flags_modeless_take_along_axis():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, idx):
+            return jnp.take_along_axis(x, idx, axis=1)
+    """)
+    assert rules_of(fs) == ["R001"]
+
+
+def test_r001_accepts_explicit_mode_and_literal_indices():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, idx):
+            a = jnp.take(x, idx, axis=0, mode="clip")
+            b = jnp.take_along_axis(x, idx, axis=1, mode="promise_in_bounds")
+            c = jnp.take(x, 3, axis=0)  # literal: cannot go OOB silently
+            return a, b, c
+    """)
+    assert rules_of(fs) == []
+
+
+def test_r001_suppression_comment():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, idx):
+            return jnp.take(x, idx, axis=0)  # analysis: ignore[R001] -- bound-checked upstream
+    """)
+    assert rules_of(fs) == []
+    assert rules_of(fs, only_active=False) == ["R001"]
+    assert fs[0].suppressed
+
+
+# ------------------------------------------------------------------- R002
+def test_r002_flags_bare_assert_in_serve():
+    fs = lint("""
+        def free(self, b):
+            assert b not in self._free, "double free"
+    """, path=SERVE)
+    assert rules_of(fs) == ["R002"]
+
+
+def test_r002_ignores_other_trees_and_typed_raises():
+    snippet = """
+        def free(self, b):
+            assert b not in self._free
+    """
+    assert rules_of(lint(snippet, path=SRC)) == []  # core/: out of scope
+    fs = lint("""
+        def free(self, b):
+            if b in self._free:
+                raise RuntimeError(f"double free of block {b}")
+    """, path=SERVE)
+    assert rules_of(fs) == []
+
+
+def test_r002_allowlists_kernel_shape_contracts():
+    fs = lint("""
+        def kernel(q, k):
+            assert q.shape == k.shape
+            assert q.dtype == k.dtype
+    """, path=KERNELS)
+    assert rules_of(fs) == []
+    # non-shape asserts in kernels are still findings
+    fs = lint("""
+        def kernel(n):
+            assert n > 0
+    """, path=KERNELS)
+    assert rules_of(fs) == ["R002"]
+
+
+def test_r002_suppression_own_line_covers_next_line():
+    fs = lint("""
+        def free(self, b):
+            # analysis: ignore[R002] -- exercised by every test run
+            assert b not in self._free
+    """, path=SERVE)
+    assert rules_of(fs) == []
+    assert [f.rule for f in fs] == ["R002"] and fs[0].suppressed
+
+
+# ------------------------------------------------------------------- R003
+def test_r003_flags_sequential_key_reuse():
+    fs = lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a, b
+    """)
+    assert rules_of(fs) == ["R003"]
+
+
+def test_r003_flags_reuse_across_loop_iterations():
+    # the PR 3 bug class: one key drawn from on every iteration
+    fs = lint("""
+        import jax
+        def f(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.normal(key, (3,)))
+            return out
+    """)
+    assert rules_of(fs) == ["R003"]
+
+
+def test_r003_accepts_split_fold_in_rederivation():
+    fs = lint("""
+        import jax
+        def f(key, n):
+            out = []
+            k = key
+            for i in range(n):
+                k, sub = jax.random.split(k)
+                out.append(jax.random.normal(sub, (3,)))
+            tail = jax.random.uniform(jax.random.fold_in(key, 99), (3,))
+            return out, tail
+    """)
+    assert rules_of(fs) == []
+
+
+def test_r003_lambda_and_nested_def_are_fresh_scopes():
+    # the vmap-over-split idiom (core/baselines.py) must not flag
+    fs = lint("""
+        import jax
+        def f(key, n, m):
+            ks = jax.random.split(key, m)
+            perm = jax.vmap(lambda kk: jax.random.permutation(kk, n))(ks)
+            return perm
+    """)
+    assert rules_of(fs) == []
+
+
+def test_r003_suppression():
+    fs = lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))  # analysis: ignore[R003] -- correlated on purpose
+            return a, b
+    """)
+    assert rules_of(fs) == []
+    assert [f.rule for f in fs] == ["R003"] and fs[0].suppressed
+
+
+# ------------------------------------------------------------------- R004
+def test_r004_flags_python_branch_on_traced_value():
+    fs = lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert rules_of(fs) == ["R004"]
+
+
+def test_r004_flags_bool_cast_and_jit_call_form():
+    fs = lint("""
+        import jax
+        def step(x):
+            flag = bool(x)
+            return x
+        step = jax.jit(step)
+    """)
+    assert rules_of(fs) == ["R004"]
+
+
+def test_r004_accepts_host_level_tests_and_statics():
+    fs = lint("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, batch, live=None, mode="fast"):
+            if live is not None:          # structure check
+                x = x * live
+            if "task_ids" in batch:       # pytree membership
+                x = x + 1
+            if x.shape[0] > 2:            # shapes are static
+                x = x[:2]
+            if mode == "fast":            # static arg
+                return x
+            return -x
+    """)
+    assert rules_of(fs) == []
+
+
+def test_r004_nested_scan_body_params_are_traced():
+    fs = lint("""
+        import jax
+        @jax.jit
+        def f(xs):
+            def body(carry, x):
+                if x > 0:
+                    carry = carry + x
+                return carry, x
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert "R004" in rules_of(fs)
+
+
+def test_r004_suppression():
+    fs = lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:  # analysis: ignore[R004] -- concrete during warmup only
+                return x
+            return -x
+    """)
+    assert rules_of(fs) == []
+
+
+# ------------------------------------------------------------------- R005
+def test_r005_flags_float_literal_operand_without_pet():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, w):
+            return jnp.einsum("bd,df->bf", x * 0.5, w)
+    """)
+    assert rules_of(fs) == ["R005"]
+
+
+def test_r005_accepts_explicit_preferred_element_type():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, w):
+            a = jnp.einsum("bd,df->bf", x * 0.5, w,
+                           preferred_element_type=jnp.float32)
+            b = jnp.einsum("bd,df->bf", x, w)  # no literal: fine
+            return a, b
+    """)
+    assert rules_of(fs) == []
+
+
+def test_r005_suppression():
+    fs = lint("""
+        import jax.numpy as jnp
+        def f(x, w):
+            return jnp.matmul(x * 2.0, w)  # analysis: ignore[R005]
+    """)
+    assert rules_of(fs) == []
+
+
+# ------------------------------------------------- suppression machinery
+def test_collect_suppressions_forms():
+    sup = collect_suppressions(textwrap.dedent("""
+        x = 1  # analysis: ignore[R001]
+        # analysis: ignore[R002, R003]
+        y = 2
+        z = 3  # analysis: ignore
+    """))
+    assert sup[2] == {"R001"}
+    assert sup[4] == {"R002", "R003"}  # own-line comment covers next line
+    assert sup[5] == {"*"}
+
+
+# ------------------------------------------------------ repo must be clean
+def test_repo_is_lint_clean():
+    from repro.analysis.lint import lint_paths
+
+    root = Path(__file__).resolve().parents[1]
+    fs = active(lint_paths([root / "src" / "repro"], root=root))
+    assert fs == [], "\n".join(f.format() for f in fs)
+
+
+# ------------------------------------------------------ jaxpr-audit walkers
+def test_walker_repins_pr7_nan_fill_gather():
+    """The PR 7 regression through the NEW walker: a mode-less jnp.take on
+    a task-id gather shows up as a FILL_OR_DROP gather in the jaxpr; the
+    mode='clip' fix audits clean."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import fill_gathers
+
+    params = jnp.zeros((4, 8))
+    ids = jnp.array([0, 3, 4, 4])  # 4 == null id, one past the stack
+
+    bad = jax.make_jaxpr(lambda p, i: jnp.take(p, i, axis=0))(params, ids)
+    assert fill_gathers(bad), "mode-less take must surface as a fill gather"
+
+    good = jax.make_jaxpr(
+        lambda p, i: jnp.take(p, i, axis=0, mode="clip")
+    )(params, ids)
+    assert fill_gathers(good) == []
+
+
+def test_walker_counts_loops_recursively():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import count_loops
+
+    def scanned(xs):
+        return jax.lax.scan(lambda c, x: (c + x, x), 0.0, xs)
+
+    def nested(xs):
+        def outer(c, x):
+            inner, _ = jax.lax.scan(lambda a, b: (a + b, b), c, xs)
+            return inner, x
+        return jax.lax.scan(outer, 0.0, xs)
+
+    xs = jnp.arange(4.0)
+    assert count_loops(jax.make_jaxpr(lambda x: x + 1)(xs)) == 0
+    assert count_loops(jax.make_jaxpr(scanned)(xs)) == 1
+    assert count_loops(jax.make_jaxpr(nested)(xs)) == 2
+
+
+def test_audit_step_pair_structural_invariants():
+    """PR 3/4 regressions through the audit: the real serving step pair has
+    zero per-token loops in parallel prefill, no fill gathers, donated
+    cache buffers, and no captured host constants (dense + paged)."""
+    from repro.analysis.jaxpr_audit import audit_step_pair
+    from repro.serve.paging import PagingSpec
+
+    findings, report = audit_step_pair("olmo_1b", "jnp", max_seq=24)
+    assert findings == [], [f.format() for f in findings]
+    pre = report["prefill_chunk[jnp,dense,parallel]"]
+    assert pre["loops"] == 1 and pre["scan_mode_loops"] == 2
+    assert pre["fill_gathers"] == 0 and pre["donated_inputs"] >= 1
+
+    spec = PagingSpec.sized(8, 24, pool_tokens=96)
+    findings, report = audit_step_pair("olmo_1b", "jnp", max_seq=24,
+                                       paging=spec)
+    assert findings == [], [f.format() for f in findings]
+    assert report["decode_tick[jnp,paged]"]["fill_gathers"] == 0
+
+
+def test_audit_retrace_single_trace_property():
+    """The PR 4 single-trace property through the audit runner: a
+    content-varying serving run leaves one trace per step."""
+    from repro.analysis.jaxpr_audit import audit_retrace
+
+    findings, report = audit_retrace("olmo_1b", "jnp", max_seq=24)
+    assert findings == [], [f.format() for f in findings]
+    assert report["decode_traces[jnp]"] == 1
+    assert report["prefill_traces[jnp]"] == 1
+
+
+def test_audit_graph_mix_fuses_per_dtype():
+    from repro.analysis.jaxpr_audit import audit_graph_mix
+
+    findings, report = audit_graph_mix()
+    assert findings == [], [f.format() for f in findings]
+    assert report["pallas_calls"] == report["dtype_groups"] == 2
+
+
+# ------------------------------------------------------------- CLI contract
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd,
+        env={"PYTHONPATH": str(Path(cwd) / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+    )
+
+
+@pytest.fixture(scope="module")
+def repo_root():
+    return Path(__file__).resolve().parents[1]
+
+
+def test_cli_seeded_regressions_fail_with_rule_id(tmp_path, repo_root):
+    """Acceptance criterion: seeded regressions each exit non-zero with the
+    correct rule id."""
+    seeds = {
+        "R001": "import jax.numpy as jnp\n"
+                "def f(p, tids):\n"
+                "    return jnp.take(p['task'], tids, axis=0)\n",
+        "R002": "def free(self, b):\n"
+                "    assert b not in self._free\n",
+        "R003": "import jax\n"
+                "def f(key):\n"
+                "    a = jax.random.normal(key, (2,))\n"
+                "    return a + jax.random.normal(key, (2,))\n",
+    }
+    for rule, code in seeds.items():
+        # R002 only applies under serve/ — mirror the tree layout
+        sub = tmp_path / ("serve" if rule == "R002" else "core")
+        sub.mkdir(exist_ok=True)
+        seeded = sub / f"seed_{rule.lower()}.py"
+        seeded.write_text(code)
+        proc = _run_cli(["--lint-only", str(seeded)], cwd=repo_root)
+        assert proc.returncode == 1, (rule, proc.stdout, proc.stderr)
+        assert rule in proc.stdout, (rule, proc.stdout)
+
+
+def test_cli_lint_clean_repo_exits_zero_and_writes_json(tmp_path, repo_root):
+    out = tmp_path / "report.json"
+    proc = _run_cli(["--lint-only", "--json", str(out)], cwd=repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(out.read_text())
+    assert report["summary"]["active"] == 0
+    assert "lint" in report
