@@ -26,21 +26,27 @@ bench-serve:
 # O(1) dispatches/tick, engine==batcher parity, paged-vs-dense parity with
 # >=4x slots at equal KV memory (block_size 8 and 16), parallel==scan
 # prefill parity, jnp==pallas attention-backend parity, the Poisson-trace
-# tail-latency property (sjf+chunked p99 TTFT <= fifo), and the graph-mixed
+# tail-latency property (sjf+chunked p99 TTFT <= fifo), the graph-mixed
 # multitask adapter properties (zero store == no-adapter parity, O(1)
-# dispatches with per-task adapters live) — and persists the perf
-# trajectory (decode/prefill tok/s per backend, slots-per-KV-byte, TTFT/ITL
-# percentiles, multitask overhead ratio) to BENCH_serve.json so future PRs
-# can diff perf; the trailing check fails the build if the latency or
-# multitask sections ever silently drop out of the report
+# dispatches with per-task adapters live), and the prefix-cache properties
+# (>=2x prefill tok/s and >=2x slots-per-KV-byte on a shared-prompt
+# workload, COW on every partially shared tail, exact parity on both
+# backends) — and APPENDS a timestamped entry to the perf trajectory
+# (decode/prefill tok/s per backend, slots-per-KV-byte, TTFT/ITL
+# percentiles, multitask overhead, prefix speedups) in BENCH_serve.json's
+# history list so future PRs can diff perf; the trailing check fails the
+# build if the latency, multitask or prefix_cache sections ever silently
+# drop out of the latest entry
 bench-smoke:
 	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6 --json BENCH_serve.json
-	python -c "import json; r = json.load(open('BENCH_serve.json')); assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r; assert r['multitask']['overhead_ratio'] > 0, r"
+	python -c "import json; r = json.load(open('BENCH_serve.json'))['history'][-1]; assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r; assert r['multitask']['overhead_ratio'] > 0, r; p = r['prefix_cache']; assert p['slots_per_kv_byte_ratio'] >= 2 and all(p[b]['prefill_speedup'] >= 2 for b in ('jnp', 'pallas')), p"
 
 # the same serving loop with attn_backend="pallas" as the DEFAULT for every
 # section (interpret mode on CPU), so the kernel serving path — not just the
 # jnp default — is exercised end-to-end on every PR; the multitask section
 # is skipped here because the pallas adapter-serving path is already pinned
-# by SERVE_TEST_ATTN_BACKEND=pallas tests/test_serve_multitask.py in ci.sh
+# by SERVE_TEST_ATTN_BACKEND=pallas tests/test_serve_multitask.py in ci.sh,
+# and the prefix section because bench_prefix_cache always measures BOTH
+# backends internally
 bench-smoke-pallas:
-	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency --skip-multitask
+	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency --skip-multitask --skip-prefix

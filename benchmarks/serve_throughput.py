@@ -24,7 +24,12 @@ count, and ASSERTS the properties the serving stack exists for:
     adapter store is token-for-token identical to the no-adapter engine,
     a mixed-task batch with randomized adapters keeps O(1) decode
     dispatches per tick and >= 0.15x the baseline throughput while the
-    online delayed-update loop re-mixes the store mid-run.
+    online delayed-update loop re-mixes the store mid-run, and
+  * prefix-shared copy-on-write KV blocks: 8 slots sharing a 100-token
+    system prompt serve >= 2x the prefill tok/s and >= 2x the
+    slots-per-KV-byte of the no-sharing baseline, token-for-token
+    identical under both attention backends, with every request
+    copy-on-writing the partially shared tail block.
 
 The interesting number on CPU is dispatches/tick and the slot-scaling of
 tokens/sec (per-dispatch overhead dominates small smoke models, which is
@@ -32,14 +37,18 @@ exactly the regime where the old one-slot-per-dispatch loop collapsed to
 1/num_slots of the throughput); the pallas kernels run in interpret mode
 on CPU, so their tok/s here measures the code path, not TPU speed.
 
-``--json [PATH]`` persists the perf trajectory (decode/prefill tok/s per
-backend, slots-per-KV-byte) to ``BENCH_serve.json`` (default) so future
-PRs can diff perf; ``make bench-smoke`` emits it on every CI run.
+``--json [PATH]`` APPENDS a timestamped entry to the perf trajectory
+(decode/prefill tok/s per backend, slots-per-KV-byte, prefix-cache
+speedups) in ``BENCH_serve.json`` (default): the file holds
+``{"history": [entry, ...]}`` ordered oldest-first so future PRs can
+diff perf across runs; ``make bench-smoke`` emits an entry on every CI
+run. A pre-history single-object file is migrated as the first entry.
 
   PYTHONPATH=src python benchmarks/serve_throughput.py [--arch olmo_1b]
       [--slots 1 2 4 8] [--prompt-len 8] [--max-new 16] [--skip-paged]
       [--skip-prefill] [--skip-backends] [--skip-latency]
-      [--skip-multitask] [--attn-backend jnp|pallas] [--json [PATH]]
+      [--skip-multitask] [--skip-prefix] [--attn-backend jnp|pallas]
+      [--json [PATH]]
 """
 from __future__ import annotations
 
@@ -49,6 +58,7 @@ import json
 import os
 import sys
 import time
+from datetime import datetime, timezone
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -565,6 +575,163 @@ def bench_multitask(attn_backend="jnp", num_slots=4, prompt_len=6,
     }
 
 
+def bench_prefix_cache(cfg, params, num_slots=8, shared_len=100,
+                       suffix_len=4, max_new=4, block_size=8, chunk=8):
+    """Prefix-shared copy-on-write KV blocks: >= 2x prefill tok/s and
+    >= 2x slots-per-KV-byte on a shared-system-prompt workload, exact
+    greedy parity with the no-sharing baseline under BOTH backends.
+
+    Workload: a warmer request registers its (shared_len + suffix_len)
+    prompt in the radix cache, then num_slots requests arrive sharing the
+    same shared_len-token system prompt with distinct suffixes.
+    ``shared_len`` is deliberately NOT block-aligned, so every request
+    copy-on-writes the partially shared tail block (cow_copies ==
+    num_slots) — the benchmark exercises the whole admission path, not
+    just whole-block aliasing.
+
+    The two >= 2x claims are measured head-to-head at equal service:
+
+      * prefill tok/s — prompt tokens SERVED per second of admission
+        (``_admit`` wall time, which includes the trie walk and the COW
+        dispatches). The cache serves shared_len of every prompt from
+        registered blocks, so only the suffix computes.
+      * slots_per_kv_byte — the no-sharing pool must hold
+        num_slots x blocks_per_request blocks for the same 8 concurrent
+        slots; the sharing pool holds one copy of the shared chain plus
+        the per-request fresh tail, a > 2x smaller block pool for the
+        SAME concurrent slot count.
+    """
+    if cfg.uses_moe:
+        # dropless capacity: dispatch shapes must not change expert drops
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    prompt_len = shared_len + suffix_len
+    per_req = -(-(prompt_len + max_new) // block_size)
+    max_seq = per_req * block_size
+    full = shared_len // block_size  # whole blocks of the shared prefix
+    fresh = per_req - full  # per-request: COW'd tail + private blocks
+    # baseline pool: every slot owns its full chain, nothing shared
+    base_spec = PagingSpec(block_size, 1 + num_slots * per_req, per_req)
+    # sharing pool: the warmer's registered chain + per-request fresh tail
+    pref_spec = PagingSpec(
+        block_size, 1 + per_req + num_slots * fresh, per_req
+    )
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, (shared_len,)).astype(np.int32)
+    warmer = np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, (suffix_len,)).astype(np.int32)]
+    )
+    prompts = [
+        np.concatenate([
+            shared,
+            rng.integers(0, cfg.vocab_size, (suffix_len,)).astype(np.int32),
+        ])
+        for _ in range(num_slots)
+    ]
+
+    def run(backend, spec, prefix):
+        model = TransformerLM(dataclasses.replace(cfg, attn_backend=backend))
+        stats = {}
+        for attempt in ("warmup", "timed", "timed"):
+            b = ContinuousBatcher(
+                model, params, num_slots=num_slots, max_seq=max_seq,
+                prefill_chunk=chunk, paging=spec, prefix_cache=prefix,
+            )
+            if prefix:
+                b.submit(Request(uid=999, tokens=warmer, max_new=max_new,
+                                 task_id=0))
+                warm_done = b.run()
+                assert len(warm_done) == 1 and not warm_done[0].truncated
+            for i, p in enumerate(prompts):
+                b.submit(Request(uid=i, tokens=p, max_new=max_new,
+                                 task_id=0))
+            t0 = time.perf_counter()
+            b._admit()  # all slots admitted in one round
+            dt = time.perf_counter() - t0
+            stats["prefill_s"] = min(stats.get("prefill_s", dt), dt)
+            b._finish_ready()
+            # run() reports every request finished on this batcher — drop
+            # the warmer so both configs compare the same 8 requests
+            done = [r for r in b.run() if r.uid != 999]
+            assert len(done) == num_slots
+            assert not any(r.truncated for r in done)
+            stats["outputs"] = {r.uid: r.out for r in done}
+            if prefix:
+                # every request COW'd the partially shared tail block and
+                # served the whole shared prefix from the cache
+                assert b.cow_copies == num_slots, b.cow_copies
+                assert b.prefix.hit_tokens == num_slots * shared_len, (
+                    b.prefix.hit_tokens
+                )
+                stats["hit_ratio"] = b.prefix.hit_ratio
+                stats["cow_copies"] = b.cow_copies
+                stats["prefill_tokens"] = b.prefill_tokens
+        # prompt tokens SERVED per second of admission wall time
+        stats["prefill_tok_per_s"] = (
+            num_slots * prompt_len / stats["prefill_s"]
+        )
+        return stats
+
+    model = TransformerLM(cfg)
+    base_bytes = _cache_nbytes(model.init_cache(num_slots, max_seq, base_spec))
+    pref_bytes = _cache_nbytes(model.init_cache(num_slots, max_seq, pref_spec))
+    bytes_ratio = base_bytes / pref_bytes
+    print(f"\nprefix cache: {num_slots} slots sharing a {shared_len}-token "
+          f"prefix (+{suffix_len} suffix, {max_new} new, block_size "
+          f"{block_size}); no-sharing pool {base_spec.num_blocks} blocks "
+          f"({base_bytes / 1e3:.0f} kB) vs sharing pool "
+          f"{pref_spec.num_blocks} blocks ({pref_bytes / 1e3:.0f} kB)")
+    report = {
+        "num_slots": num_slots,
+        "shared_len": shared_len,
+        "suffix_len": suffix_len,
+        "max_new": max_new,
+        "block_size": block_size,
+        "baseline_kv_bytes": base_bytes,
+        "prefix_kv_bytes": pref_bytes,
+        "baseline_slots_per_kv_byte": num_slots / base_bytes,
+        "prefix_slots_per_kv_byte": num_slots / pref_bytes,
+        "slots_per_kv_byte_ratio": bytes_ratio,
+    }
+    for backend in ("jnp", "pallas"):
+        base = run(backend, base_spec, False)
+        pref = run(backend, pref_spec, True)
+        speedup = pref["prefill_tok_per_s"] / base["prefill_tok_per_s"]
+        assert pref["outputs"] == base["outputs"], (
+            f"prefix sharing diverged from the no-sharing baseline "
+            f"({backend})"
+        )
+        report[backend] = {
+            "baseline_prefill_tok_per_s": base["prefill_tok_per_s"],
+            "prefix_prefill_tok_per_s": pref["prefill_tok_per_s"],
+            "prefill_speedup": speedup,
+            "hit_ratio": pref["hit_ratio"],
+            "cow_copies": pref["cow_copies"],
+            "prefill_tokens": pref["prefill_tokens"],
+            "_outputs": pref["outputs"],
+        }
+        print(f"  {backend:>6}: prefill {base['prefill_tok_per_s']:>8.1f} "
+              f"-> {pref['prefill_tok_per_s']:>8.1f} tok/s "
+              f"({speedup:.1f}x), hit ratio {pref['hit_ratio']:.2f}, "
+              f"{pref['cow_copies']} COW copies, parity OK")
+    assert report["jnp"]["_outputs"] == report["pallas"]["_outputs"], (
+        "pallas backend diverged from jnp under prefix sharing"
+    )
+    for backend in ("jnp", "pallas"):
+        del report[backend]["_outputs"]
+        assert report[backend]["prefill_speedup"] >= 2.0, (
+            f"prefix cache prefill speedup below 2x under {backend}: "
+            f"{report[backend]['prefill_speedup']:.2f}x"
+        )
+    assert bytes_ratio >= 2.0, (
+        f"prefix pool not 2x smaller per slot: {bytes_ratio:.2f}x"
+    )
+    print(f"OK: {report['jnp']['prefill_speedup']:.1f}x (jnp) / "
+          f"{report['pallas']['prefill_speedup']:.1f}x (pallas) prefill "
+          f"tok/s and {bytes_ratio:.1f}x slots-per-KV-byte at exact greedy "
+          f"parity, both backends")
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
@@ -581,6 +748,8 @@ def main():
                     help="skip the Poisson-arrival tail-latency section")
     ap.add_argument("--skip-multitask", action="store_true",
                     help="skip the graph-mixed adapter serving section")
+    ap.add_argument("--skip-prefix", action="store_true",
+                    help="skip the prefix-cache / copy-on-write section")
     ap.add_argument("--attn-backend", default="jnp",
                     choices=("jnp", "pallas"),
                     help="attention backend for ALL sections (the backends "
@@ -685,11 +854,33 @@ def main():
             attn_backend=cfg.attn_backend
         )
 
+    # ---- property 8: prefix-shared COW blocks: 2x prefill + 2x memory ----
+    if not args.skip_prefix:
+        report["prefix_cache"] = bench_prefix_cache(cfg, params)
+
     if args.json:
+        # append to the perf trajectory: BENCH_serve.json holds
+        # {"history": [entry, ...]} ordered oldest-first, one timestamped
+        # entry per run. A pre-history single-object file migrates in
+        # place as the first entry.
+        history = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                prev = json.load(f)
+            history = (
+                prev["history"]
+                if isinstance(prev, dict) and "history" in prev
+                else [prev]
+            )
+        report["timestamp"] = datetime.now(timezone.utc).isoformat(
+            timespec="seconds"
+        )
+        history.append(report)
         with open(args.json, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
+            json.dump({"history": history}, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"\nwrote perf report to {args.json}")
+        print(f"\nwrote perf report to {args.json} "
+              f"({len(history)} history entries)")
 
 
 if __name__ == "__main__":

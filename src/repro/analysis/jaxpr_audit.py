@@ -29,6 +29,12 @@ pos-flavor normalization, and ``graph_mix_tree``, then asserts:
         donated (``tf.aliasing_output`` aliases in the lowered module) so
         every tick updates the KV pools in place instead of doubling
         peak memory.
+  A006  fused copy-on-write block copy — the prefix cache's COW copy
+        (``repro.serve.step.make_cow_copy``) must lower to ONE jitted
+        dispatch: zero loops (no per-row host loop over the partial
+        block), no NaN-fill gathers, the cache pytree donated, and a
+        single trace across (src, dst, rows) values — block ids and row
+        counts are data, not trace constants.
 
 Run via ``python -m repro.analysis`` (see ``docs/analysis.md``).
 """
@@ -328,6 +334,67 @@ def audit_graph_mix() -> tuple[list[Finding], dict]:
     return findings, {"pallas_calls": calls, "dtype_groups": groups}
 
 
+def audit_cow(arch: str, max_seq: int, spec) -> tuple[list[Finding], dict]:
+    """A006: the prefix cache's copy-on-write block copy must be one fused
+    jitted dispatch — no host loop over rows, no fill gathers, donated
+    cache buffers, one trace across (src, dst, rows) values."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.step import make_cow_copy
+
+    cfg, model, params = _smoke_model(arch, "jnp")
+    caches = model.init_cache(2, max_seq, spec)
+    cow = make_cow_copy(spec)
+    args = (
+        jnp.asarray(1, jnp.int32), jnp.asarray(2, jnp.int32),
+        jnp.asarray(3, jnp.int32),
+    )
+    closed = jax.make_jaxpr(cow)(caches, *args)
+    lowered = cow.lower(caches, *args).as_text()
+    loops = count_loops(closed)
+    fills = fill_gathers(closed)
+    donated = donated_inputs(lowered)
+    # block ids and row counts are runtime data: two value sets, one trace
+    base = cow._cache_size()
+    caches = cow(caches, *args)
+    caches = cow(
+        caches, jnp.asarray(4, jnp.int32), jnp.asarray(5, jnp.int32),
+        jnp.asarray(1, jnp.int32),
+    )
+    traces = cow._cache_size() - base
+
+    findings: list[Finding] = []
+    if loops != 0:
+        findings.append(Finding(
+            rule="A006", path="cow_copy", line=0,
+            message=f"{loops} loops in the COW block copy — the masked "
+                    "slab copy must be one fused dispatch, not a per-row "
+                    "host loop",
+        ))
+    for hit in fills:
+        findings.append(Finding(
+            rule="A006", path="cow_copy", line=0,
+            message=f"NaN-fill gather in the COW block copy: {hit}",
+        ))
+    if donated < 1:
+        findings.append(Finding(
+            rule="A006", path="cow_copy", line=0,
+            message="COW copy does not donate the cache pytree — every "
+                    "copy-on-write would double peak KV memory",
+        ))
+    if traces != 1:
+        findings.append(Finding(
+            rule="A006", path="cow_copy", line=0,
+            message=f"{traces} traces across two (src, dst, rows) value "
+                    "sets — block ids and row counts must be data, not "
+                    "trace constants",
+        ))
+    return findings, {
+        "loops": loops, "fill_gathers": len(fills),
+        "donated_inputs": donated, "traces": traces,
+    }
+
+
 # ------------------------------------------------------------------ driver
 def run_audit(
     backends=("jnp", "pallas"),
@@ -359,4 +426,7 @@ def run_audit(
     f, r = audit_graph_mix()
     findings.extend(f)
     report["graph_mix"] = r
+    f, r = audit_cow(arch, max_seq, spec)
+    findings.extend(f)
+    report["cow_copy"] = r
     return findings, report

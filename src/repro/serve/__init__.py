@@ -3,5 +3,11 @@ from repro.serve.engine import generate, ServeEngine
 from repro.serve.batching import ContinuousBatcher, Request, TickBudgetExceeded
 from repro.serve.scheduler import Scheduler, POLICIES
 from repro.serve.slots import SlotMap
-from repro.serve.paging import BlockAllocator, PagingSpec
-from repro.serve.step import make_serve_step
+from repro.serve.paging import (
+    BlockAllocator,
+    PagingSpec,
+    PrefixAdmit,
+    PrefixMatch,
+    RadixPrefixCache,
+)
+from repro.serve.step import make_cow_copy, make_serve_step

@@ -41,6 +41,17 @@ Paged mode (pass a ``repro.serve.paging.PagingSpec``): admission reserves
 lifetime (allocator backpressure queues requests that cannot get them) and
 every retirement path — finish, cancel, timeout — returns them.
 
+``prefix_cache=True`` (paged, attention-only models) puts a
+``repro.serve.paging.RadixPrefixCache`` in front of admission: a request
+whose prompt shares a cached prefix aliases those blocks (refcounted)
+instead of recomputing them, prefill starts at ``cached_tokens``, a
+partially-shared boundary block is copy-on-written in one fused dispatch
+(``serve.step.make_cow_copy``), and retirement decrefs instead of freeing
+— fully prefilled prompt blocks stay resident (LRU-evicted lazily) for
+future hits. Greedy outputs are token-for-token identical to the
+no-sharing path: registered blocks hold final KV values for exactly the
+positions the masked attention reads. See ``docs/serving.md``.
+
 ``decode_dispatches`` / ``prefill_dispatches`` / ``mixed_dispatches`` /
 ``ticks`` count real jitted calls so tests and
 ``benchmarks/serve_throughput.py`` can assert the O(1)-dispatch property
@@ -54,10 +65,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import TransformerLM
-from repro.serve.paging import BlockAllocator, PagingSpec
+from repro.serve.paging import BlockAllocator, PagingSpec, RadixPrefixCache
 from repro.serve.scheduler import Scheduler
 from repro.serve.slots import SlotMap
-from repro.serve.step import make_serve_step
+from repro.serve.step import make_cow_copy, make_serve_step
 
 
 class TickBudgetExceeded(RuntimeError):
@@ -98,6 +109,7 @@ class Request:
     # bookkeeping stamped by the scheduler/executor
     submit_time: float | None = None
     prompt_done: int = 0  # prompt tokens already written to the cache
+    cached_tokens: int = 0  # prompt tokens served from the prefix cache
     _arrival: int = 0
 
     @property
@@ -116,6 +128,7 @@ class ContinuousBatcher:
         max_seq: int,
         prefill_chunk: int = 16,
         paging: PagingSpec | None = None,
+        prefix_cache: bool = False,
         prefill_mode: str = "parallel",
         policy: str = "fifo",
         chunk_budget: int | None = None,
@@ -161,12 +174,42 @@ class ContinuousBatcher:
             self.slot_blocks: list[list[int]] = [[] for _ in range(num_slots)]
         else:
             self.slot_capacity = max_seq
+        self.prefix = None
+        self._cow_fn = None
+        if prefix_cache:
+            if paging is None:
+                raise ValueError(
+                    "prefix_cache=True requires a paged cache layout "
+                    "(pass a PagingSpec) — dense per-slot stripes cannot "
+                    "alias blocks between slots"
+                )
+            kinds = set(model.cfg.pattern)
+            recurrent = kinds - set(TransformerLM._ATTN_KINDS)
+            if recurrent:
+                # a recurrent layer's state at position p depends on ALL
+                # positions <= p and lives outside the paged KV pools, so
+                # aliasing KV blocks would resume from a stale/foreign state
+                raise ValueError(
+                    f"prefix_cache=True requires an attention-only model; "
+                    f"layer kinds {sorted(recurrent)} carry recurrent state "
+                    "the KV blocks do not capture"
+                )
+            self.prefix = RadixPrefixCache(self.allocator)
+            self._cow_fn = make_cow_copy(paging)
+            if self.scheduler.cost_fn is None:
+                # sjf should order by UNCACHED prompt tokens — a long
+                # prompt with a resident prefix is a short job
+                self.scheduler.cost_fn = lambda r: (
+                    len(r.tokens) - self.prefix.match(r.task_id, r.tokens).tokens
+                )
         self.caches = model.init_cache(num_slots, max_seq, paging)
         self.finished: list[Request] = []
         self.ticks = 0
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
         self.mixed_dispatches = 0  # fused prefill+decode (chunk_budget mode)
+        self.cow_copies = 0  # copy-on-write dispatches (prefix-cache mode)
+        self.prefill_tokens = 0  # prompt tokens actually computed
         self._tick_fn, self._prefill_fn = make_serve_step(
             model, max_seq, paging, prefill_mode
         )
@@ -281,15 +324,53 @@ class ContinuousBatcher:
 
     def _free_slot_blocks(self, s: int):
         if self.paging is not None and self.slot_blocks[s]:
-            self.allocator.free(self.slot_blocks[s])
+            if self.prefix is not None:
+                # decref, not free: blocks registered in the prefix trie
+                # stay resident (cached-idle, LRU-evictable) for future
+                # hits; unregistered ones return to the free list
+                self.prefix.release(self.slot_blocks[s])
+            else:
+                self.allocator.free(self.slot_blocks[s])
             self.slot_blocks[s] = []
             self.block_tables[s, :] = 0
+
+    def _register_prefix(self, s: int, req: Request):
+        """Insert a COMPLETELY prefilled prompt's full blocks into the
+        prefix trie (only final KV values are ever aliasable)."""
+        if self.prefix is not None and req.prefill_remaining == 0:
+            self.prefix.insert(req.task_id, req.tokens, self.slot_blocks[s])
 
     def _try_bind(self, s: int, req: Request) -> bool:
         """Scheduler placement callback: reserve the request's blocks for
         its whole lifetime and bind the slot — or report backpressure."""
         if self.paging is not None:
             needed = self.paging.blocks_for(len(req.tokens) + req.max_new)
+            if self.prefix is not None:
+                admit = self.prefix.admit(req.task_id, req.tokens, needed)
+                if admit is None:
+                    return False  # truly out of live + unreclaimable memory
+                blocks = list(admit.blocks)
+                if admit.cow is not None:
+                    # the boundary block is only partially shared: copy the
+                    # shared rows into the slot's private block in ONE fused
+                    # dispatch, then unpin the source
+                    src, dst, rows = admit.cow
+                    self.caches = self._cow_fn(
+                        self.caches,
+                        jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32),
+                        jnp.asarray(rows, jnp.int32),
+                    )
+                    self.cow_copies += 1
+                    self.prefix.release([src])
+                self.slot_blocks[s] = blocks
+                self.block_tables[s, :] = 0
+                self.block_tables[s, : len(blocks)] = blocks
+                # prefill resumes after the cached prefix
+                req.prompt_done = admit.cached_tokens
+                req.cached_tokens = admit.cached_tokens
+                self.slots.bind(s, req, pos=admit.cached_tokens)
+                return True
             if not self.allocator.can_alloc(needed):
                 return False  # wait for finishing requests to free blocks
             blocks = self.allocator.alloc(needed)
@@ -392,16 +473,26 @@ class ContinuousBatcher:
 
     def _prefill_full(self, newly: list[int]):
         """The pre-scheduler admission gulp: run every newly admitted
-        prompt to completion in ceil(max_prompt_len / C) dispatches and
-        emit each request's first generated token."""
+        prompt to completion and emit each request's first generated token.
+
+        Each slot prefills from its own cursor (``prompt_done`` — 0 for a
+        fresh prompt, ``cached_tokens`` after a prefix-cache hit), so the
+        round costs ceil(max_uncached_len / C) dispatches: slots whose
+        prefix is resident contribute only their uncached tail."""
         task_ids = jnp.asarray(self.slots.task_ids(self._null_task))
         reset = np.zeros(self.num_slots, bool)
         reset[newly] = True
-        maxlen = max(len(self.slots.reqs[s].tokens) for s in newly)
         c = self.prefill_chunk
         vlm = self.model.cfg.input_mode == "vlm"
         first_logits = np.zeros(self.num_slots, object)
-        for c0 in range(0, maxlen, c):
+        while True:
+            pending = [
+                s for s in newly
+                if self.slots.reqs[s] is not None
+                and self.slots.reqs[s].prefill_remaining > 0
+            ]
+            if not pending:
+                break
             tokens = np.zeros((self.num_slots, c), np.int32)
             valid = np.zeros((self.num_slots, c), bool)
             extras = {}
@@ -409,18 +500,19 @@ class ContinuousBatcher:
                 emb = np.zeros((self.num_slots, c, self.model.cfg.d_model),
                                np.float32)
                 msk = np.zeros((self.num_slots, c), bool)
-            for s in newly:
+            for s in pending:
                 req = self.slots.reqs[s]
-                t = np.asarray(req.tokens, np.int32)[c0 : c0 + c]
+                d = req.prompt_done
+                t = np.asarray(req.tokens, np.int32)[d : d + c]
                 tokens[s, : len(t)] = t
                 valid[s, : len(t)] = True
-                if vlm and req.extras is not None and len(t):
+                if vlm and req.extras is not None:
                     emb[s, : len(t)] = np.asarray(
                         req.extras["vision_embeds"], np.float32
-                    )[c0 : c0 + len(t)]
+                    )[d : d + len(t)]
                     msk[s, : len(t)] = np.asarray(
                         req.extras["vision_mask"], bool
-                    )[c0 : c0 + len(t)]
+                    )[d : d + len(t)]
             if vlm:
                 extras = {
                     "vision_embeds": jnp.asarray(emb),
@@ -433,21 +525,26 @@ class ContinuousBatcher:
                 self._adapter_tree(),
             )
             self.prefill_dispatches += 1
+            self.prefill_tokens += int(valid.sum())
             self.slots.set_positions(positions)
             reset = np.zeros(self.num_slots, bool)
             last_np = np.asarray(last)
-            for s in newly:
-                if valid[s].any():  # prompt reached into this chunk
-                    first_logits[s] = last_np[s]
+            for s in pending:
+                req = self.slots.reqs[s]
+                if req is None:  # cancelled from a streaming callback
+                    continue
+                req.prompt_done += int(valid[s].sum())
+                first_logits[s] = last_np[s]
         # the logits after each prompt's LAST token are the first generated
         # token — emit them, exactly like the engine's prefill. submit()
-        # rejects empty prompts, so every admitted slot has real last-token
-        # logits here.
+        # rejects empty prompts and prefix matching is capped at
+        # len(prompt) - 1, so every admitted slot computed at least one
+        # prompt token and has real last-token logits here.
         for s in newly:
             req = self.slots.reqs[s]
             if req is None:  # cancelled from a streaming callback mid-round
                 continue
-            req.prompt_done = len(req.tokens)
+            self._register_prefix(s, req)
             self._emit(req, row=first_logits[s])
 
     def tick(self):
@@ -541,6 +638,7 @@ class ContinuousBatcher:
         )
         self.ticks += 1
         self.mixed_dispatches += 1
+        self.prefill_tokens += sum(n for _, n in plan)
         self.slots.set_positions(positions)
         last_np = np.asarray(last)
         for s, n in plan:
@@ -549,6 +647,7 @@ class ContinuousBatcher:
                 continue
             req.prompt_done += n
             if req.prefill_remaining == 0:
+                self._register_prefix(s, req)
                 self._emit(req, row=last_np[s])  # first generated token
         for s, req in decoding:
             if self.slots.reqs[s] is not req:  # cancelled mid-round

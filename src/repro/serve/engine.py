@@ -68,6 +68,15 @@ class ServeEngine:
     # optional repro.serve.adapters.TaskAdapterStore: serve graph-mixed
     # per-task adapters gathered by each row's task id
     adapters: Any = None
+    # None (default) sizes the batcher at one slot per prompt row — the
+    # parity-oracle configuration. Smaller values serve the batch through
+    # fewer slots in admission waves, which is how the prefix cache pays
+    # off inside one generate() call: prompts admitted later alias the
+    # blocks registered by earlier waves.
+    num_slots: int | None = None
+    # paged + attention-only models: serve through a RadixPrefixCache
+    # (refcounted block sharing + COW; see repro.serve.paging)
+    prefix_cache: bool = False
 
     def generate(
         self,
@@ -118,11 +127,14 @@ class ServeEngine:
             def stream(req, tok):
                 on_token(req.uid, tok)
 
+        slots = self.num_slots if self.num_slots is not None else b
+        if not 0 < slots:
+            raise ValueError(f"num_slots must be positive, got {slots}")
         batcher = ContinuousBatcher(
-            self.model, self.params, num_slots=b, max_seq=self.max_seq,
+            self.model, self.params, num_slots=slots, max_seq=self.max_seq,
             prefill_chunk=self.prefill_chunk, paging=self.paging,
-            prefill_mode=self.prefill_mode, on_token=stream,
-            sample_fn=sample_fn, adapters=self.adapters,
+            prefix_cache=self.prefix_cache, prefill_mode=self.prefill_mode,
+            on_token=stream, sample_fn=sample_fn, adapters=self.adapters,
         )
         vlm = self.model.cfg.input_mode == "vlm"
         for i, uid in enumerate(uids):
@@ -141,6 +153,18 @@ class ServeEngine:
                 task_id=int(task_ids[i]), extras=extras,
             ))
         finished = {r.uid: r for r in batcher.run()}
+        # surface the cache's effectiveness for this call (examples/bench)
+        self.last_prefix_stats = (
+            {
+                "hit_ratio": batcher.prefix.hit_ratio,
+                "hit_tokens": batcher.prefix.hit_tokens,
+                "lookup_tokens": batcher.prefix.lookup_tokens,
+                "cow_copies": batcher.cow_copies,
+                "prefill_tokens": batcher.prefill_tokens,
+            }
+            if batcher.prefix is not None
+            else None
+        )
         return np.stack(
             [np.asarray(finished[uid].out, np.int32) for uid in uids]
         )

@@ -29,10 +29,21 @@ Invariants (everything downstream relies on these):
     stale bytes are never read.
   * recurrent (mamba2 / xLSTM) states are O(1) per slot and stay dense —
     paging only applies to the attention entries of the cache pytree.
+
+Prefix sharing (``RadixPrefixCache`` + the allocator's refcounts) relaxes
+the one-owner rule above in a controlled way: a block holding a fully
+prefilled PROMPT chunk may be aliased read-only by several slots' tables,
+each holding a reference. Writes never land in a shared block — admission
+copy-on-writes the one partially-shared block up front — so the recycling
+invariant ("every readable position was written by its owner") still holds
+per logical position. See ``docs/serving.md`` "Prefix caching &
+copy-on-write".
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,17 +103,31 @@ class PagingSpec:
 
 
 class BlockAllocator:
-    """Host-side free list over physical blocks ``1..num_blocks-1``.
+    """Host-side refcounted free list over physical blocks ``1..num_blocks-1``.
 
-    Pure bookkeeping — it never touches device memory. The batcher calls
-    ``alloc`` at admission and ``free`` at finish; ``can_alloc`` is the
-    admission-backpressure check.
+    Pure bookkeeping — it never touches device memory. Every allocatable
+    block is in exactly one of three states:
+
+      * **free** — on the free list, ``refcount == 0``. Only these are
+        handed out by ``alloc`` (which sets ``refcount = 1``).
+      * **live** — ``refcount >= 1``: referenced by that many slot block
+        tables (plus, transiently, an admission-time pin on a COW source).
+      * **cached-idle** — ``refcount == 0`` but NOT on the free list: held
+        only by the prefix cache's trie, waiting to be revived (``incref``)
+        or evicted (``reclaim``). Without a prefix cache this state never
+        occurs.
+
+    The single-owner batcher path uses ``alloc`` + ``free`` exactly as
+    before; the prefix-sharing path uses ``incref``/``decref``/``reclaim``
+    so one block can back the same prompt prefix in many slots.
     """
 
     def __init__(self, spec: PagingSpec):
         self.spec = spec
         # pop() hands out ascending ids first — deterministic tables for tests
         self._free = list(range(spec.num_blocks - 1, 0, -1))
+        self._free_set = set(self._free)
+        self.refcount = [0] * spec.num_blocks
         self.high_water = 0  # max blocks simultaneously allocated
 
     @property
@@ -113,6 +138,19 @@ class BlockAllocator:
     def used_blocks(self) -> int:
         return (self.spec.num_blocks - 1) - len(self._free)
 
+    @property
+    def live_refs(self) -> int:
+        """Sum of refcounts — equals the number of live block-table entries
+        (plus transient COW pins) when the batcher's bookkeeping is sound."""
+        return sum(self.refcount[1:])
+
+    def _check_id(self, b: int) -> None:
+        # typed errors, not asserts: a bad id reaching the free list would
+        # later be handed to TWO live slots, whose KV writes would silently
+        # corrupt each other. Must survive `python -O` (R002).
+        if not 0 < b < self.spec.num_blocks:
+            raise RuntimeError(f"foreign block id {b}")
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
@@ -121,23 +159,336 @@ class BlockAllocator:
             raise RuntimeError(
                 f"out of KV blocks: requested {n}, free {len(self._free)}"
             )
-        blocks = [self._free.pop() for _ in range(n)]
+        blocks = []
+        for _ in range(n):
+            b = self._free.pop()
+            self._free_set.discard(b)
+            if self.refcount[b] != 0:
+                raise RuntimeError(
+                    f"block {b} was on the free list with refcount "
+                    f"{self.refcount[b]}"
+                )
+            self.refcount[b] = 1
+            blocks.append(b)
         self.high_water = max(self.high_water, self.used_blocks)
         return blocks
 
-    def free(self, blocks: list[int]) -> None:
+    def incref(self, blocks: list[int]) -> None:
+        """Add a reference to each block (aliasing into another slot's
+        table, reviving a cached-idle block, or pinning a COW source).
+        Free-listed blocks cannot be revived — they must go through
+        ``alloc``."""
         for b in blocks:
-            # fail fast on double-free / foreign ids: a block id reaching the
-            # free list twice would later be handed to TWO live slots, whose
-            # KV writes would silently corrupt each other. Typed errors, not
-            # asserts — these invariants must survive `python -O` (R002).
-            if not 0 < b < self.spec.num_blocks:
-                raise RuntimeError(f"foreign block id {b}")
-            if b in self._free:
+            self._check_id(b)
+            if b in self._free_set:
+                raise RuntimeError(f"incref of free block {b}")
+            self.refcount[b] += 1
+
+    def decref(self, blocks: list[int]) -> list[int]:
+        """Drop one reference per block; returns the blocks that reached
+        refcount 0 WITHOUT reclaiming them — the caller decides whether a
+        zeroed block returns to the free list or stays cached-idle in the
+        prefix trie."""
+        zeroed = []
+        for b in blocks:
+            self._check_id(b)
+            if self.refcount[b] <= 0:
+                raise RuntimeError(f"double free of block {b}")
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                zeroed.append(b)
+        return zeroed
+
+    def reclaim(self, blocks: list[int]) -> None:
+        """Return refcount-0 blocks to the free list."""
+        for b in blocks:
+            self._check_id(b)
+            if self.refcount[b] != 0:
+                raise RuntimeError(
+                    f"reclaim of block {b} with refcount {self.refcount[b]}"
+                )
+            if b in self._free_set:
                 raise RuntimeError(f"double free of block {b}")
             self._free.append(b)
+            self._free_set.add(b)
         if len(self._free) > self.spec.num_blocks - 1:
             raise RuntimeError(
                 f"free list holds {len(self._free)} blocks but only "
                 f"{self.spec.num_blocks - 1} are allocatable"
             )
+
+    def free(self, blocks: list[int]) -> None:
+        """Single-owner release: refcount 1 -> 0 and straight back to the
+        free list (the pre-refcount contract; shared blocks must go through
+        ``decref``)."""
+        for b in blocks:
+            self._check_id(b)
+            if b in self._free_set or self.refcount[b] == 0:
+                raise RuntimeError(f"double free of block {b}")
+            if self.refcount[b] != 1:
+                raise RuntimeError(
+                    f"free of shared block {b} (refcount {self.refcount[b]}) "
+                    "— shared references must be released via decref"
+                )
+        self.reclaim(self.decref(blocks))
+
+
+def _key_seq(tokens) -> list:
+    """Hashable per-position keys for trie matching: ints for flat prompts,
+    tuples for (S0, K) codebook rows."""
+    arr = np.asarray(tokens)
+    if arr.ndim == 1:
+        return [int(t) for t in arr]
+    return [tuple(int(x) for x in row) for row in arr]
+
+
+class _PrefixNode:
+    """One full prompt block in the radix trie. ``key`` is the block's
+    ``block_size``-tuple of token keys; the root sentinel has ``key=()``
+    and ``block=-1``."""
+
+    __slots__ = ("key", "block", "parent", "children", "last_use")
+
+    def __init__(self, key, block, parent):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children = {}
+        self.last_use = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Longest cached prefix for one (task_id, prompt) lookup."""
+
+    nodes: tuple  # matched full-block chain, root-first
+    partial: object  # trie node sharing only the first `partial_rows` of
+    partial_rows: int  # the next block (COW source), or None
+    tokens: int  # total reusable tokens: len(nodes) * block_size + rows
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixAdmit:
+    """Admission decision: the slot's table-order block ids (aliased prefix
+    chain first, then freshly allocated tail), how many prompt tokens are
+    already in cache, and — when the last reusable block is only partially
+    shared — the ``(src, dst, rows)`` copy-on-write the executor must
+    dispatch before prefill (then ``release([src])`` to drop the pin)."""
+
+    blocks: tuple
+    cached_tokens: int
+    cow: tuple | None
+
+
+class RadixPrefixCache:
+    """vLLM/SGLang-style radix prefix cache over the refcounted allocator.
+
+    Keyed on (task_id, token ids): per-task adapters make KV task-dependent
+    (PR 7), so identical token prefixes under different tasks never alias.
+    Only FULL prompt blocks are inserted, and only once their prefill has
+    completed — a block is registered iff every row holds final KV values,
+    so aliasing it read-only is always sound.
+
+    Refcounts count slot-table references; trie membership itself holds no
+    reference. A registered block whose refcount drops to 0 stays
+    **cached-idle** (off the free list, evictable) instead of being
+    reclaimed — that pool is the LRU eviction ground ``alloc`` harvests
+    lazily when the free list runs dry, replacing hard backpressure.
+    Holders reference their whole prefix chain, so ``parent.refcount >=
+    child.refcount`` and refcount-0 subtrees can always be evicted
+    leaf-first.
+    """
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self.block_size = allocator.spec.block_size
+        self._roots: dict = {}  # task_id -> sentinel node
+        self._node_of_block: dict = {}  # block id -> node
+        self._clock = 0
+        # stats (the benchmark's hit-ratio numbers)
+        self.lookups = 0
+        self.lookup_tokens = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        # property-test instrumentation: (block, refcount at eviction)
+        self.evicted_log: list = []
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ------------------------------------------------------------- queries
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._node_of_block)
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hit_tokens / max(1, self.lookup_tokens)
+
+    def match(self, task_id: int, tokens) -> PrefixMatch:
+        """Longest cached block-aligned prefix (read-only — no refcount or
+        LRU side effects). Matching is capped at ``len(prompt) - 1`` so an
+        admitted slot always computes at least its last prompt token (the
+        logits that emit the first generated token)."""
+        keys = _key_seq(tokens)
+        bs = self.block_size
+        limit = len(keys) - 1
+        chain: list = []
+        partial, rows = None, 0
+        node = self._roots.get(task_id)
+        if node is not None:
+            matched = 0
+            while matched + bs <= limit:
+                child = node.children.get(tuple(keys[matched : matched + bs]))
+                if child is None:
+                    break
+                chain.append(child)
+                node = child
+                matched += bs
+            # partial tail: a child sharing a strict prefix of the next
+            # (sub-block) span — the copy-on-write source
+            rest = keys[matched:limit]
+            for key, child in node.children.items():
+                j = 0
+                while j < len(rest) and j < len(key) and key[j] == rest[j]:
+                    j += 1
+                if j > rows:
+                    rows, partial = j, child
+        return PrefixMatch(
+            tuple(chain), partial, rows,
+            len(chain) * bs + rows,
+        )
+
+    def _protected(self, m: PrefixMatch) -> set:
+        prot = {n.block for n in m.nodes}
+        if m.partial is not None:
+            prot.add(m.partial.block)
+        return prot
+
+    def _evictable(self, protect: frozenset | set = frozenset()) -> list:
+        rc = self.allocator.refcount
+        return [
+            b for b in self._node_of_block
+            if rc[b] == 0 and b not in protect
+        ]
+
+    def can_admit(self, fresh: int, m: PrefixMatch) -> bool:
+        """Backpressure check: fresh blocks are covered by the free list
+        plus evictable cached-idle blocks NOT pinned by this match."""
+        avail = self.allocator.free_blocks + len(self._evictable(self._protected(m)))
+        return fresh <= avail
+
+    # ------------------------------------------------------------ eviction
+    def _drop(self, node: _PrefixNode) -> None:
+        self.evicted_log.append((node.block, self.allocator.refcount[node.block]))
+        del node.parent.children[node.key]
+        del self._node_of_block[node.block]
+        self.evictions += 1
+        self.allocator.reclaim([node.block])
+
+    def _evict_one(self, protect: set) -> None:
+        """Evict the least-recently-used refcount-0 LEAF (children must go
+        before parents so surviving chains stay contiguous)."""
+        rc = self.allocator.refcount
+        best = None
+        for b, node in self._node_of_block.items():
+            if rc[b] != 0 or b in protect or node.children:
+                continue
+            if best is None or node.last_use < best.last_use:
+                best = node
+        if best is None:
+            raise RuntimeError(
+                "prefix cache: free list empty and no evictable "
+                "refcount-0 block"
+            )
+        self._drop(best)
+
+    def alloc(self, n: int, protect: set = frozenset()) -> list[int]:
+        """Allocate ``n`` blocks, lazily evicting LRU cached-idle blocks
+        when the free list cannot cover them."""
+        while self.allocator.free_blocks < n:
+            self._evict_one(protect)
+        return self.allocator.alloc(n)
+
+    # ----------------------------------------------------------- admission
+    def admit(self, task_id: int, tokens, total_blocks: int) -> PrefixAdmit | None:
+        """One admission: match, backpressure-check, pin the matched chain
+        (incref), allocate the fresh tail (evicting as needed, never the
+        pinned chain). Returns None when live + unreclaimable memory truly
+        cannot cover the request."""
+        keys_len = len(_key_seq(tokens))
+        m = self.match(task_id, tokens)
+        fresh_needed = total_blocks - len(m.nodes)
+        if not self.can_admit(fresh_needed, m):
+            return None
+        self.lookups += 1
+        self.lookup_tokens += keys_len
+        self.hit_tokens += m.tokens
+        t = self._tick()
+        pinned = [n.block for n in m.nodes]
+        for n in m.nodes:
+            n.last_use = t
+        if m.partial is not None:
+            pinned.append(m.partial.block)
+            m.partial.last_use = t
+        self.allocator.incref(pinned)
+        fresh = self.alloc(fresh_needed, self._protected(m))
+        blocks = [n.block for n in m.nodes] + fresh
+        cow = None
+        if m.partial is not None:
+            # the fresh block at table index len(nodes) receives the
+            # partially-shared rows; the source stays pinned until the
+            # executor's copy dispatch retires, then release([src])
+            cow = (m.partial.block, fresh[0], m.partial_rows)
+        return PrefixAdmit(tuple(blocks), m.tokens, cow)
+
+    def insert(self, task_id: int, tokens, blocks: list[int]) -> None:
+        """Register a COMPLETELY prefilled prompt's full blocks. Called by
+        the executor when ``prompt_done == len(tokens)`` — never earlier,
+        so no partially-written block is ever aliasable. Existing nodes win
+        duplicate keys (the slot's private duplicate stays unregistered and
+        is reclaimed at release)."""
+        keys = _key_seq(tokens)
+        bs = self.block_size
+        node = self._roots.setdefault(task_id, _PrefixNode((), -1, None))
+        t = self._tick()
+        for i in range(len(keys) // bs):
+            key = tuple(keys[i * bs : (i + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                b = blocks[i]
+                if b in self._node_of_block:
+                    raise RuntimeError(
+                        f"block {b} already registered at another trie "
+                        "position"
+                    )
+                child = _PrefixNode(key, b, node)
+                node.children[key] = child
+                self._node_of_block[b] = child
+            child.last_use = t
+            node = child
+
+    def release(self, blocks: list[int]) -> None:
+        """Drop one reference per block (slot finish / cancel / timeout /
+        COW-source unpin). Zeroed blocks registered in the trie stay
+        cached-idle for future hits; unregistered ones go straight back to
+        the free list."""
+        zeroed = self.allocator.decref(blocks)
+        self.allocator.reclaim(
+            [b for b in zeroed if b not in self._node_of_block]
+        )
+
+    def clear(self) -> None:
+        """Drop every cached-idle block (leaf-first). Blocks still
+        referenced by live slots stay registered."""
+        while True:
+            rc = self.allocator.refcount
+            leaves = [
+                n for b, n in self._node_of_block.items()
+                if rc[b] == 0 and not n.children
+            ]
+            if not leaves:
+                return
+            for n in leaves:
+                self._drop(n)

@@ -52,6 +52,7 @@ class Scheduler:
         policy: str = "fifo",
         chunk_budget: int | None = None,
         now_fn=None,
+        cost_fn=None,
     ):
         if policy not in POLICIES:
             raise ValueError(
@@ -64,6 +65,11 @@ class Scheduler:
             )
         self.policy = policy
         self.chunk_budget = chunk_budget
+        # sjf orders by PREFILL COST. The default cost is the prompt length;
+        # a prefix-caching executor injects `len(prompt) - cached_tokens` so
+        # a long prompt whose prefix is already resident schedules like the
+        # short job it actually is.
+        self.cost_fn = cost_fn
         self.queue: list = []
         self._now = now_fn if now_fn is not None else time.monotonic
         self._arrivals = itertools.count(1)
@@ -91,10 +97,18 @@ class Scheduler:
         return None
 
     # ---------------------------------------------------------- ordering
+    def _cost(self, req) -> int:
+        """Prefill cost of a request — prompt tokens that still need
+        compute. Injectable (``cost_fn``) so prefix-cache hits count only
+        UNCACHED tokens toward sjf ordering."""
+        if self.cost_fn is not None:
+            return self.cost_fn(req)
+        return len(req.tokens)
+
     def _key(self, req):
         arrival = getattr(req, "_arrival", 0)
         if self.policy == "sjf":
-            return (len(req.tokens), arrival)
+            return (self._cost(req), arrival)
         if self.policy == "priority":
             return (req.priority, arrival)
         return (arrival,)

@@ -72,13 +72,18 @@ class SlotMap:
         return None
 
     # ------------------------------------------------------------ updates
-    def bind(self, slot: int, req) -> None:
+    def bind(self, slot: int, req, pos: int = 0) -> None:
+        """Bind a request, starting at write position ``pos`` (0 for a
+        fresh prompt; the prefix cache binds at ``cached_tokens`` so
+        prefill skips the aliased prefix entirely)."""
         if self.reqs[slot] is not None:
             # binding over a live request would silently interleave two
             # requests' tokens through one cache stripe
             raise RuntimeError(f"slot {slot} already bound")
+        if pos < 0:
+            raise ValueError(f"bind position must be >= 0, got {pos}")
         self.reqs[slot] = req
-        self.pos[slot] = 0
+        self.pos[slot] = pos
 
     def release(self, slot: int):
         """Unbind and return the slot's request (position left as-is — the

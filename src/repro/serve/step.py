@@ -217,3 +217,47 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
         jax.jit(decode_tick, donate_argnums=(3,)),
         jax.jit(prefill, donate_argnums=(3,)),
     )
+
+
+@functools.lru_cache(maxsize=None)
+def make_cow_copy(paging):
+    """ONE jitted copy-on-write dispatch for the prefix cache.
+
+    Returns ``cow_copy(caches, src, dst, rows)`` copying rows ``[0, rows)``
+    of physical block ``src`` into block ``dst`` across EVERY paged pool
+    leaf of the cache pytree in a single fused dispatch — no per-row or
+    per-layer host loop (pinned by jaxpr audit A006). ``src``/``dst``/
+    ``rows`` must be 0-d int32 arrays so the trace is shared across all
+    (src, dst, rows) values; the cache pytree is donated, so the executor
+    rebinds ``self.caches`` to the result.
+
+    Used at admission when a request's prompt shares only the first
+    ``rows`` tokens of a cached block: the new slot gets a private copy of
+    the shared rows and writes its divergent tail there, never mutating
+    the aliased source (see ``repro.serve.paging.RadixPrefixCache``).
+    """
+    if paging is None:
+        raise ValueError("copy-on-write requires a paged cache layout")
+    nb, bs = paging.num_blocks, paging.block_size
+
+    def cow_copy(caches, src, dst, rows):
+        row_mask = jnp.arange(bs) < rows  # (BS,)
+
+        def copy(pool):
+            # paged pool leaves are (P, num_blocks, block_size, ...); any
+            # dense per-slot leaf (recurrent state) is left untouched —
+            # shape checks are static, so this never branches on data
+            if pool.ndim < 3 or pool.shape[1] != nb or pool.shape[2] != bs:
+                return pool
+            trail = (1,) * (pool.ndim - 3)
+            src_rows = jnp.take(pool, src[None], axis=1, mode="clip")
+            dst_rows = jnp.take(pool, dst[None], axis=1, mode="clip")
+            merged = jnp.where(
+                row_mask.reshape((1, 1, bs) + trail), src_rows, dst_rows
+            )
+            sel = (jnp.arange(nb) == dst).reshape((1, nb, 1) + trail)
+            return jnp.where(sel, merged, pool)
+
+        return jax.tree.map(copy, caches)
+
+    return jax.jit(cow_copy, donate_argnums=(0,))
