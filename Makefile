@@ -31,22 +31,27 @@ bench-serve:
 # dispatches with per-task adapters live), and the prefix-cache properties
 # (>=2x prefill tok/s and >=2x slots-per-KV-byte on a shared-prompt
 # workload, COW on every partially shared tail, exact parity on both
-# backends) — and APPENDS a timestamped entry to the perf trajectory
-# (decode/prefill tok/s per backend, slots-per-KV-byte, TTFT/ITL
-# percentiles, multitask overhead, prefix speedups) in BENCH_serve.json's
-# history list so future PRs can diff perf; the trailing check fails the
-# build if the latency, multitask or prefix_cache sections ever silently
+# backends), and the graceful-degradation property (preemptive swap-out
+# strictly improves shorts' p99 TTFT-in-ticks over refusal-only at < 2x
+# makespan, token parity both modes) — and APPENDS a timestamped entry to
+# the perf trajectory (decode/prefill tok/s per backend,
+# slots-per-KV-byte, TTFT/ITL percentiles, multitask overhead, prefix
+# speedups, degradation ratios) in BENCH_serve.json's history list so
+# future PRs can diff perf; the trailing check fails the build if the
+# latency, multitask, prefix_cache or degradation sections ever silently
 # drop out of the latest entry
 bench-smoke:
 	PYTHONPATH=src python benchmarks/serve_throughput.py --slots 1 2 --prompt-len 4 --max-new 6 --json BENCH_serve.json
-	python -c "import json; r = json.load(open('BENCH_serve.json'))['history'][-1]; assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r; assert r['multitask']['overhead_ratio'] > 0, r; p = r['prefix_cache']; assert p['slots_per_kv_byte_ratio'] >= 2 and all(p[b]['prefill_speedup'] >= 2 for b in ('jnp', 'pallas')), p"
+	python -c "import json; r = json.load(open('BENCH_serve.json'))['history'][-1]; assert r['latency']['sjf_chunked']['ttft_p99_s'] > 0, r; assert r['multitask']['overhead_ratio'] > 0, r; p = r['prefix_cache']; assert p['slots_per_kv_byte_ratio'] >= 2 and all(p[b]['prefill_speedup'] >= 2 for b in ('jnp', 'pallas')), p; d = r['degradation']; assert d['preempt']['swap_outs'] >= 1 and d['ttft_p99_ratio'] < 1 and d['makespan_ratio'] < 2, d"
 
 # the same serving loop with attn_backend="pallas" as the DEFAULT for every
 # section (interpret mode on CPU), so the kernel serving path — not just the
 # jnp default — is exercised end-to-end on every PR; the multitask section
 # is skipped here because the pallas adapter-serving path is already pinned
 # by SERVE_TEST_ATTN_BACKEND=pallas tests/test_serve_multitask.py in ci.sh,
-# and the prefix section because bench_prefix_cache always measures BOTH
-# backends internally
+# the prefix section because bench_prefix_cache always measures BOTH
+# backends internally, and the degradation section because the pallas
+# preemption/swap path is pinned by SERVE_TEST_ATTN_BACKEND=pallas
+# tests/test_serve_faults.py in ci.sh
 bench-smoke-pallas:
-	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency --skip-multitask --skip-prefix
+	PYTHONPATH=src python benchmarks/serve_throughput.py --attn-backend pallas --slots 1 2 --prompt-len 4 --max-new 6 --skip-paged --skip-prefill --skip-backends --skip-latency --skip-multitask --skip-prefix --skip-degradation

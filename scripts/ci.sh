@@ -2,7 +2,7 @@
 # Tier-1 verify: the green suite in one command (same as `make ci`).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-# mechanized invariants FIRST (docs/analysis.md): AST lint R001-R005 +
+# mechanized invariants FIRST (docs/analysis.md): AST lint R001-R006 +
 # jaxpr audit A001-A005 over the serving entry points; a rule violation
 # or a structural regression (retrace, hidden while loop, NaN-fill
 # gather, lost donation) fails the build before the test suite spends
@@ -20,6 +20,11 @@ SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # (the default suite above already ran these under the jnp backend)
 SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_serve_multitask.py
+# chaos suite once more with the flash kernels: fault seams, lane
+# quarantine, bounded retry and preemptive swap-out must degrade
+# gracefully on BOTH backends (the jnp run rode in the default suite)
+SERVE_TEST_ATTN_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_serve_faults.py
 # serving benchmark smoke: O(1)-dispatch, engine==batcher parity, paged-cache
 # parity/memory, prefill-mode parity, jnp-vs-pallas backend parity and the
 # Poisson-trace tail-latency property run on every PR (interpret/CPU mode),

@@ -12,6 +12,7 @@ from repro.analysis.rules.r002_bare_assert import BareAssertRule
 from repro.analysis.rules.r003_key_reuse import KeyReuseRule
 from repro.analysis.rules.r004_traced_bool import TracedBoolRule
 from repro.analysis.rules.r005_dtype_promotion import DtypePromotionRule
+from repro.analysis.rules.r006_swallowed_except import SwallowedExceptRule
 
 ALL_RULES = [
     TakeModeRule(),
@@ -19,6 +20,7 @@ ALL_RULES = [
     KeyReuseRule(),
     TracedBoolRule(),
     DtypePromotionRule(),
+    SwallowedExceptRule(),
 ]
 
 RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

@@ -1,6 +1,7 @@
 from repro.serve.adapters import TaskAdapterStore
 from repro.serve.engine import generate, ServeEngine
 from repro.serve.batching import ContinuousBatcher, Request, TickBudgetExceeded
+from repro.serve.faults import FaultError, FaultEvent, FaultPlan
 from repro.serve.scheduler import Scheduler, POLICIES
 from repro.serve.slots import SlotMap
 from repro.serve.paging import (
@@ -10,4 +11,4 @@ from repro.serve.paging import (
     PrefixMatch,
     RadixPrefixCache,
 )
-from repro.serve.step import make_cow_copy, make_serve_step
+from repro.serve.step import make_cow_copy, make_serve_step, make_swap

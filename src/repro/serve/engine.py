@@ -77,6 +77,13 @@ class ServeEngine:
     # paged + attention-only models: serve through a RadixPrefixCache
     # (refcounted block sharing + COW; see repro.serve.paging)
     prefix_cache: bool = False
+    # optional repro.serve.faults.FaultPlan: inject scripted/probabilistic
+    # faults at the executor's seams (chaos testing; None = zero overhead)
+    faults: Any = None
+    # paged mode: swap out lower-priority running requests under block
+    # pressure instead of refusing admission (see docs/serving.md "Fault
+    # tolerance & graceful degradation")
+    preempt: bool = False
 
     def generate(
         self,
@@ -135,6 +142,7 @@ class ServeEngine:
             prefill_chunk=self.prefill_chunk, paging=self.paging,
             prefix_cache=self.prefix_cache, prefill_mode=self.prefill_mode,
             on_token=stream, sample_fn=sample_fn, adapters=self.adapters,
+            faults=self.faults, preempt=self.preempt,
         )
         vlm = self.model.cfg.input_mode == "vlm"
         for i, uid in enumerate(uids):
@@ -153,6 +161,16 @@ class ServeEngine:
                 task_id=int(task_ids[i]), extras=extras,
             ))
         finished = {r.uid: r for r in batcher.run()}
+        failed = [r for r in finished.values() if r.failed]
+        if failed:
+            # the uniform-batch contract returns a dense (B, num_tokens)
+            # array, so partial failure cannot be represented — surface it
+            # instead of silently stacking ragged outputs
+            raise RuntimeError(
+                "request(s) failed during generation: " + "; ".join(
+                    f"uid {r.uid}: {r.error}" for r in failed
+                )
+            )
         # surface the cache's effectiveness for this call (examples/bench)
         self.last_prefix_stats = (
             {

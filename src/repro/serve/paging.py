@@ -232,6 +232,39 @@ class BlockAllocator:
                 )
         self.reclaim(self.decref(blocks))
 
+    def check_consistent(self, expected: list[int] | None = None) -> None:
+        """Reconciliation pass: free-list/refcount coherence, and — when
+        the caller supplies per-block expected reference counts (computed
+        from its own tables) — exact agreement with them. Raises
+        ``RuntimeError`` on the first violation; part of the executor's
+        ``check_invariants()`` (chaos tests run it after every fault)."""
+        if len(self._free) != len(self._free_set):
+            raise RuntimeError(
+                f"free list holds {len(self._free)} entries but "
+                f"{len(self._free_set)} distinct blocks — duplicate free"
+            )
+        for b in self._free:
+            self._check_id(b)
+            if self.refcount[b] != 0:
+                raise RuntimeError(
+                    f"block {b} is on the free list with refcount "
+                    f"{self.refcount[b]}"
+                )
+        if self.refcount[0] != 0:
+            raise RuntimeError(
+                f"null block 0 holds refcount {self.refcount[0]} — it must "
+                "never be handed out"
+            )
+        if expected is not None:
+            for b in range(1, self.spec.num_blocks):
+                if self.refcount[b] != expected[b]:
+                    raise RuntimeError(
+                        f"block {b}: allocator refcount {self.refcount[b]} "
+                        f"but {expected[b]} table reference(s) — "
+                        f"{'leaked' if self.refcount[b] > expected[b] else 'dangling'}"
+                        " reference"
+                    )
+
 
 def _key_seq(tokens) -> list:
     """Hashable per-position keys for trie matching: ints for flat prompts,
@@ -378,6 +411,62 @@ class RadixPrefixCache:
         plus evictable cached-idle blocks NOT pinned by this match."""
         avail = self.allocator.free_blocks + len(self._evictable(self._protected(m)))
         return fresh <= avail
+
+    def can_alloc(self, n: int) -> bool:
+        """Can ``n`` blocks be produced WITHOUT trie matching (free list +
+        every evictable cached-idle block)? The swap-in restore path uses
+        this: restored blocks never alias the trie, so no match pins
+        anything."""
+        return n <= self.allocator.free_blocks + len(self._evictable())
+
+    def check_chains(self) -> None:
+        """Trie structural reconciliation: node<->block bijectivity, parent
+        linkage, chain-monotone refcounts (holders reference their WHOLE
+        prefix chain, so ``parent.refcount >= child.refcount``), and no
+        registered block on the free list. Raises ``RuntimeError`` on the
+        first violation; part of the executor's ``check_invariants()``."""
+        rc = self.allocator.refcount
+        seen: set = set()
+        for task, root in self._roots.items():
+            stack = [root]
+            while stack:
+                node = stack.pop()
+                for key, child in node.children.items():
+                    if child.parent is not node or child.key != key:
+                        raise RuntimeError(
+                            f"task {task}: trie node for block {child.block} "
+                            "has broken parent/key linkage"
+                        )
+                    if self._node_of_block.get(child.block) is not child:
+                        raise RuntimeError(
+                            f"task {task}: block {child.block} not (or "
+                            "wrongly) registered in the block index"
+                        )
+                    if child.block in seen:
+                        raise RuntimeError(
+                            f"block {child.block} registered at two trie "
+                            "positions"
+                        )
+                    seen.add(child.block)
+                    if child.block in self.allocator._free_set:
+                        raise RuntimeError(
+                            f"registered block {child.block} is on the free "
+                            "list — it would be handed to a live slot while "
+                            "still aliasable"
+                        )
+                    if node.block != -1 and rc[node.block] < rc[child.block]:
+                        raise RuntimeError(
+                            f"chain refcounts not monotone: parent block "
+                            f"{node.block} ({rc[node.block]}) < child "
+                            f"{child.block} ({rc[child.block]})"
+                        )
+                    stack.append(child)
+        orphans = set(self._node_of_block) - seen
+        if orphans:
+            raise RuntimeError(
+                f"blocks {sorted(orphans)} are in the block index but "
+                "unreachable from any trie root"
+            )
 
     # ------------------------------------------------------------ eviction
     def _drop(self, node: _PrefixNode) -> None:

@@ -96,6 +96,20 @@ class Scheduler:
                 return req
         return None
 
+    def requeue(self, req) -> None:
+        """Return a preempted (or transiently faulted) in-flight request to
+        the queue at its original arrival position. The arrival stamp and
+        ``submit_time`` are PRESERVED: requeuing must not reset the
+        deadline clock or let the request jump (or lose) its place under
+        arrival-ordered policies."""
+        arrival = getattr(req, "_arrival", 0)
+        idx = len(self.queue)
+        for j, q in enumerate(self.queue):
+            if getattr(q, "_arrival", 0) > arrival:
+                idx = j
+                break
+        self.queue.insert(idx, req)
+
     # ---------------------------------------------------------- ordering
     def _cost(self, req) -> int:
         """Prefill cost of a request — prompt tokens that still need
@@ -130,11 +144,24 @@ class Scheduler:
         skipped). Returns the [(slot, request)] admitted."""
         admitted = []
         free = list(free_slots)
+        now = None
         for req in self.ordered_queue():
             if not free:
                 break
+            nb = getattr(req, "not_before", 0.0)
+            if nb:
+                # transient-fault backoff: SKIPPED (not head-of-line
+                # blocking — a backing-off request must not starve the
+                # rest of the queue while it waits out its delay)
+                now = self.now() if now is None else now
+                if nb > now:
+                    continue
             if not try_bind(free[0], req):
                 break
+            if not any(q is req for q in self.queue):
+                # the bind callback retired it (e.g. retry exhaustion
+                # turned it terminal-failed mid-admission)
+                continue
             slot = free.pop(0)
             self.queue.remove(req)
             admitted.append((slot, req))

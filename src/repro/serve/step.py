@@ -220,6 +220,59 @@ def make_serve_step(model: TransformerLM, max_seq: int, paging=None,
 
 
 @functools.lru_cache(maxsize=None)
+def make_swap(paging):
+    """Jitted ``(swap_out, swap_in)`` pair for preemptive swap-out.
+
+    ``swap_out(caches, blocks, slot)`` gathers ONE slot's cache state in a
+    single fused dispatch: every paged pool leaf contributes its
+    ``blocks``-indexed pages (``blocks`` is the slot's table row,
+    ``(max_blocks_per_slot,)`` int32 padded with the null block 0, so the
+    shape — and therefore the trace — is shared by all slots), and every
+    dense per-slot leaf (recurrent state) contributes its ``slot`` column.
+    The executor copies the returned pytree to host memory and frees the
+    blocks.
+
+    ``swap_in(caches, blocks, slot, saved)`` is the inverse: a donated
+    scatter of the saved pages into a NEW set of blocks (padding rows land
+    in block 0, the null write sink, so they are harmless) and of the
+    saved dense columns into the new slot. Restoring through fresh blocks
+    means a swapped-in slot never aliases prefix-cache blocks — its pages
+    hold mid-generation KV that must stay private.
+
+    Shapes are fixed by (paging, model), so each direction compiles once.
+    """
+    if paging is None:
+        raise ValueError("swap-out requires a paged cache layout")
+    nb, bs = paging.num_blocks, paging.block_size
+
+    # paged pool leaves are (P, num_blocks, block_size, ...); anything else
+    # is dense per-slot state (P, B, ...) — static shape checks, never a
+    # branch on data (same predicate as make_cow_copy)
+    def swap_out(caches, blocks, slot):
+        def gather(pool):
+            if pool.ndim >= 3 and pool.shape[1] == nb and pool.shape[2] == bs:
+                return jnp.take(pool, blocks, axis=1, mode="clip")
+            return jnp.take(pool, slot[None], axis=1, mode="clip")
+
+        return jax.tree.map(gather, caches)
+
+    def swap_in(caches, blocks, slot, saved):
+        def scatter(pool, slab):
+            if pool.ndim >= 3 and pool.shape[1] == nb and pool.shape[2] == bs:
+                # duplicate padding indices all point at null block 0 —
+                # last-write-wins there is irrelevant (never read)
+                return pool.at[:, blocks].set(slab)
+            return pool.at[:, slot].set(slab[:, 0])
+
+        return jax.tree.map(scatter, caches, saved)
+
+    return (
+        jax.jit(swap_out),
+        jax.jit(swap_in, donate_argnums=(0,)),
+    )
+
+
+@functools.lru_cache(maxsize=None)
 def make_cow_copy(paging):
     """ONE jitted copy-on-write dispatch for the prefix cache.
 

@@ -283,6 +283,66 @@ def test_r005_suppression():
     assert rules_of(fs) == []
 
 
+# ------------------------------------------------------------------- R006
+def test_r006_flags_bare_except_on_serve_path():
+    fs = lint("""
+        def retire(self, uid):
+            try:
+                self._free(uid)
+            except:
+                pass
+    """, path=SERVE)
+    assert rules_of(fs) == ["R006"]
+
+
+def test_r006_flags_broad_silent_except():
+    fs = lint("""
+        def retire(self, uid):
+            try:
+                self._free(uid)
+            except (ValueError, Exception):
+                ...
+    """, path=SERVE)
+    assert rules_of(fs) == ["R006"]
+
+
+def test_r006_accepts_typed_and_acting_handlers():
+    fs = lint("""
+        def retire(self, uid):
+            try:
+                self._free(uid)
+            except FaultError:
+                self.retire_faults += 1
+            try:
+                self._free(uid)
+            except Exception as e:
+                self.errors.append(e)  # broad, but observable
+    """, path=SERVE)
+    assert rules_of(fs) == []
+
+
+def test_r006_only_applies_under_serve_or_kernels():
+    fs = lint("""
+        def f():
+            try:
+                g()
+            except:
+                pass
+    """)  # default path is core/ — out of scope
+    assert rules_of(fs) == []
+
+
+def test_r006_suppression():
+    fs = lint("""
+        def f(self):
+            try:
+                g()
+            except Exception:  # analysis: ignore[R006]
+                pass
+    """, path=SERVE)
+    assert [f.rule for f in fs] == ["R006"] and fs[0].suppressed
+
+
 # ------------------------------------------------- suppression machinery
 def test_collect_suppressions_forms():
     sup = collect_suppressions(textwrap.dedent("""

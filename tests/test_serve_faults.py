@@ -1,0 +1,468 @@
+"""Chaos suite: fault injection, preemptive swap-out, graceful degradation.
+
+Pins the ISSUE 10 acceptance criteria:
+
+* zero overhead off — ``faults=None`` and an EMPTY ``FaultPlan`` serve
+  token-for-token identically with identical dispatch counts (the seams
+  are pure no-ops when unarmed);
+* every seam — alloc, incref, dispatch (decode/prefill/mixed/cow/swap),
+  nan, adapter, free, clock — fires where documented and the engine
+  degrades gracefully: transient faults retry with full token parity,
+  poisoned lanes quarantine without perturbing neighbours, retry
+  exhaustion is a terminal ``Request.failed``, never a crash;
+* ``run()`` never raises under injected faults except the documented
+  ``TickBudgetExceeded``;
+* the allocator reconciles at drain after every schedule
+  (``check_invariants()``): no leaked blocks, no dangling refcounts;
+* preemptive swap-out under block pressure preserves the evicted
+  request's tokens exactly (swap-out/swap-in round-trip parity).
+
+Randomized chaos (hypothesis, when installed): seeded random
+``FaultPlan`` schedules over dense+paged — whatever fires, unaffected
+requests keep token parity with the fault-free run and the engine drains
+reconcilable.
+
+``SERVE_TEST_ATTN_BACKEND=pallas`` re-runs the suite on the flash
+kernels (scripts/ci.sh exercises both backends).
+"""
+import dataclasses
+import functools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # randomized chaos skips; scripted seams still run
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get
+from repro.models import TransformerLM
+from repro.serve import (
+    ContinuousBatcher,
+    FaultPlan,
+    PagingSpec,
+    Request,
+    ServeEngine,
+    TickBudgetExceeded,
+)
+
+BACKEND = os.environ.get("SERVE_TEST_ATTN_BACKEND", "jnp")
+MAX_SEQ = 32
+SHAPES = ((9, 6), (6, 5), (12, 4))  # (prompt_len, max_new) per request
+
+
+@functools.lru_cache(maxsize=None)
+def _built():
+    cfg = dataclasses.replace(
+        get("qwen2_5_14b", smoke=True), attn_backend=BACKEND
+    )
+    model = TransformerLM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, shapes=SHAPES, **kw):
+    rng = np.random.default_rng(0)
+    return [
+        Request(
+            uid=i, max_new=mn,
+            tokens=rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32),
+            **kw,
+        )
+        for i, (n, mn) in enumerate(shapes)
+    ]
+
+
+def _spec(pool_tokens=4 * MAX_SEQ, block_size=8):
+    return PagingSpec.sized(block_size, MAX_SEQ, pool_tokens=pool_tokens)
+
+
+def _serve(
+    faults=None, shapes=SHAPES, paged=True, num_slots=3, req_kw=None, **kw
+):
+    """Build a fresh batcher, submit deterministic requests, drain it.
+    Returns ({uid: Request}, batcher)."""
+    cfg, model, params = _built()
+    if paged and "paging" not in kw:
+        kw["paging"] = _spec()
+    b = ContinuousBatcher(
+        model, params, num_slots=num_slots, max_seq=MAX_SEQ,
+        prefill_chunk=8, faults=faults, **kw,
+    )
+    for r in _requests(cfg, shapes, **(req_kw or {})):
+        b.submit(r)
+    b.run()
+    return {r.uid: r for r in b.finished}, b
+
+
+def _tokens(finished):
+    return {uid: list(r.out) for uid, r in finished.items()}
+
+
+def _assert_clean(b):
+    summary = b.check_invariants()
+    assert summary["live_slots"] == 0 and summary["queued"] == 0
+    if b.paging is not None:
+        assert summary["live_refs"] == 0
+
+
+# ------------------------------------------------------- zero overhead off
+@pytest.mark.parametrize("paged", [False, True])
+def test_empty_plan_is_token_and_dispatch_identical(paged):
+    """An armed-but-empty FaultPlan must not change ONE thing: same
+    tokens, same dispatch counts (no extra device work), empty log."""
+    plan = FaultPlan()
+    off, b_off = _serve(faults=None, paged=paged)
+    on, b_on = _serve(faults=plan, paged=paged)
+    assert _tokens(off) == _tokens(on)
+    for counter in ("decode_dispatches", "prefill_dispatches",
+                    "mixed_dispatches", "cow_copies", "prefill_tokens"):
+        assert getattr(b_off, counter) == getattr(b_on, counter), counter
+    assert plan.fired == 0 and plan.log == []
+    # faults=None leaves even the finiteness scan off (greedy fast path
+    # never materializes host logits)
+    assert b_off.quarantine is False and b_on.quarantine is True
+    _assert_clean(b_off)
+    _assert_clean(b_on)
+
+
+# ------------------------------------------------------------- alloc seam
+def test_alloc_fault_backpressures_then_recovers():
+    plan = FaultPlan().script("alloc", uid=1, count=2)
+    base, _ = _serve()
+    fin, b = _serve(faults=plan)
+    assert plan.fired == 2
+    assert _tokens(base) == _tokens(fin)
+    # exhaustion is backpressure, not a counted retry: the request just
+    # waits in queue and admits once the seam stops firing
+    assert not fin[1].failed and fin[1].retries == 0
+    _assert_clean(b)
+
+
+# ------------------------------------------------------------ incref seam
+def test_incref_fault_on_prefix_sharing_path():
+    """Second request shares the first's prompt blocks; the injected
+    chain-pin failure retries and the shared-prefix serve still matches
+    the non-shared baseline token-for-token."""
+    cfg, _, _ = _built()
+    rng = np.random.default_rng(3)
+    pa = rng.integers(1, cfg.vocab_size, (16,)).astype(np.int32)
+    pb = np.concatenate([pa[:8], rng.integers(1, cfg.vocab_size, (4,))
+                         ]).astype(np.int32)
+
+    def run(faults, prefix):
+        cfg, model, params = _built()
+        b = ContinuousBatcher(
+            model, params, num_slots=1, max_seq=MAX_SEQ, prefill_chunk=8,
+            paging=_spec(), prefix_cache=prefix, faults=faults,
+        )
+        b.submit(Request(uid=0, tokens=pa.copy(), max_new=4))
+        b.submit(Request(uid=1, tokens=pb.copy(), max_new=4))
+        b.run()
+        return {r.uid: r for r in b.finished}, b
+
+    base, _ = run(None, prefix=False)
+    plan = FaultPlan().script("incref", uid=1, count=1)
+    fin, b = run(plan, prefix=True)
+    assert plan.fired == 1
+    assert _tokens(base) == _tokens(fin)
+    assert not fin[1].failed
+    _assert_clean(b)
+
+
+# ------------------------------------------------ dispatch seams (+ retry)
+@pytest.mark.parametrize("paged", [False, True])
+def test_decode_dispatch_fault_retries_with_parity(paged):
+    plan = FaultPlan().script("dispatch", where="decode", count=2)
+    base, _ = _serve(paged=paged)
+    fin, b = _serve(faults=plan, paged=paged)
+    assert plan.fired == 2 and b.dispatch_faults == 2
+    assert _tokens(base) == _tokens(fin)
+    _assert_clean(b)
+
+
+def test_prefill_fault_mid_gulp_resumes_exactly():
+    """The prefill seam fires BEFORE the dispatch, so the interrupted gulp
+    resumes from the same chunk boundary: byte-identical tokens."""
+    plan = FaultPlan().script("dispatch", where="prefill", tick=0, count=1)
+    base, _ = _serve()
+    fin, b = _serve(faults=plan)
+    assert plan.fired == 1 and b.dispatch_faults == 1
+    assert _tokens(base) == _tokens(fin)
+    _assert_clean(b)
+
+
+def test_mixed_dispatch_fault_in_chunked_mode():
+    plan = FaultPlan().script("dispatch", where="mixed", count=2)
+    base, _ = _serve(chunk_budget=8)
+    fin, b = _serve(faults=plan, chunk_budget=8)
+    assert plan.fired == 2 and b.dispatch_faults == 2
+    assert _tokens(base) == _tokens(fin)
+    _assert_clean(b)
+
+
+def test_permanent_dispatch_fault_fails_terminally_without_raising():
+    """run() absorbs even a 100% dispatch-failure rate: every request
+    ends terminal-failed with the retry-exhaustion error, nothing
+    raises, and the allocator still reconciles."""
+    plan = FaultPlan().probabilistic("dispatch", p=1.0)
+    fin, b = _serve(faults=plan, max_retries=2)
+    assert fin and all(r.failed and not r.done for r in fin.values())
+    assert all("dispatch failed" in r.error for r in fin.values())
+    _assert_clean(b)
+
+
+def test_run_tick_budget_still_enforced_under_faults():
+    plan = FaultPlan().probabilistic("dispatch", p=1.0)
+    cfg, model, params = _built()
+    b = ContinuousBatcher(
+        model, params, num_slots=3, max_seq=MAX_SEQ, prefill_chunk=8,
+        faults=plan, max_retries=10_000,
+    )
+    for r in _requests(cfg):
+        b.submit(r)
+    # an unbounded retry budget makes the fault permanent from run()'s
+    # point of view: no-progress rounds burn the tick budget instead of
+    # spinning forever — the ONE documented exception
+    with pytest.raises(TickBudgetExceeded):
+        b.run(max_ticks=5)
+
+
+# ---------------------------------------------------- cow seam (satellite 1)
+def _prefix_pair(cfg):
+    rng = np.random.default_rng(7)
+    pa = rng.integers(1, cfg.vocab_size, (12,)).astype(np.int32)
+    pb = np.concatenate(
+        [pa[:5], rng.integers(1, cfg.vocab_size, (5,))]
+    ).astype(np.int32)
+    return pa, pb
+
+
+def _run_cow(faults, max_retries=3):
+    cfg, model, params = _built()
+    pa, pb = _prefix_pair(cfg)
+    b = ContinuousBatcher(
+        model, params, num_slots=1, max_seq=MAX_SEQ, prefill_chunk=8,
+        paging=_spec(), prefix_cache=True, faults=faults,
+        max_retries=max_retries,
+    )
+    b.submit(Request(uid=0, tokens=pa.copy(), max_new=4))
+    b.submit(Request(uid=1, tokens=pb.copy(), max_new=4))
+    b.run()
+    return {r.uid: r for r in b.finished}, b
+
+
+def test_cow_fault_unwinds_and_retries():
+    """A dispatch fault between COW block reservation and the copy must
+    not leak: the finally-path releases the fresh blocks AND the
+    transient source pin, and the retry then succeeds with parity."""
+    base, _ = _run_cow(None)
+    plan = FaultPlan().script("dispatch", where="cow", count=1)
+    fin, b = _run_cow(plan)
+    assert plan.fired == 1
+    assert _tokens(base) == _tokens(fin)
+    assert fin[1].retries == 1 and b.cow_copies == 1
+    _assert_clean(b)
+
+
+def test_cow_fault_exhaustion_is_terminal_and_leak_free():
+    plan = FaultPlan().script("dispatch", where="cow", count=None)
+    base, _ = _run_cow(None)
+    fin, b = _run_cow(plan, max_retries=2)
+    assert fin[1].failed and "retries exhausted" in fin[1].error
+    assert list(fin[0].out) == list(base[0].out)  # sharer unaffected
+    _assert_clean(b)
+
+
+# ----------------------------------------------------- free seam (satellite 2)
+def test_free_fault_mid_retire_stays_reconcilable():
+    """A fault inside ``_retire_expired`` skips that retirement for the
+    round — slot bound, blocks held — and the retry next round frees
+    exactly once. No double-free, no leak."""
+    plan = (
+        FaultPlan()
+        .script("clock", tick=2, skew_s=1_000.0)
+        .script("free", count=1)
+    )
+    fin, b = _serve(
+        faults=plan, now_fn=lambda: 0.0, req_kw={"timeout_s": 500.0}
+    )
+    assert b.retire_faults == 1
+    assert fin and all(r.timed_out and not r.done for r in fin.values())
+    _assert_clean(b)
+
+
+# ---------------------------------------------------------------- nan seam
+def test_nan_quarantine_fails_only_the_poisoned_lane():
+    base, _ = _serve()
+    plan = FaultPlan().script("nan", uid=0, count=1)
+    fin, b = _serve(faults=plan)
+    assert b.quarantined == 1 and plan.fired == 1
+    assert fin[0].failed and "non-finite" in fin[0].error
+    # neighbours keep token-for-token parity with the fault-free run
+    for uid in (1, 2):
+        assert list(fin[uid].out) == list(base[uid].out)
+    _assert_clean(b)
+
+
+def test_quarantine_preserves_single_dispatch_per_tick():
+    """The finiteness check rides the already-materialized logits: same
+    dispatch counts as the unchecked run."""
+    _, b_off = _serve(faults=None)
+    _, b_on = _serve(faults=FaultPlan().script("nan", uid=0, count=1))
+    assert b_on.decode_dispatches <= b_off.decode_dispatches
+    assert b_on.prefill_dispatches == b_off.prefill_dispatches
+
+
+# ------------------------------------------------------------ adapter seam
+def test_adapter_fault_is_absorbed_not_fatal():
+    from repro.core.graph import ring_graph
+    from repro.serve import TaskAdapterStore
+
+    cfg, model, params = _built()
+    store = TaskAdapterStore(
+        model, ring_graph(cfg.num_tasks), mixing="bsr", rank=2
+    )
+    plan = FaultPlan().script("adapter", uid=0, count=1)
+    base, _ = _serve(adapters=store)
+    fin, b = _serve(faults=plan, adapters=store)
+    assert b.adapter_faults == 1 and plan.fired == 1
+    assert _tokens(base) == _tokens(fin)  # tokens were already emitted
+    assert all(r.done for r in fin.values())
+    _assert_clean(b)
+
+
+# -------------------------------------------------------------- clock seam
+def test_clock_skew_triggers_timeout_storm():
+    plan = FaultPlan().script("clock", tick=2, skew_s=1_000.0)
+    fin, b = _serve(
+        faults=plan, now_fn=lambda: 0.0, req_kw={"timeout_s": 500.0}
+    )
+    assert plan.fired == 1  # the activation is logged once
+    assert fin and all(r.timed_out and not r.done for r in fin.values())
+    # skew struck mid-flight: at least one lane had already emitted
+    assert any(r.out for r in fin.values())
+    _assert_clean(b)
+
+
+# ------------------------------------------------------ preemptive swap-out
+def _pressure_run(pool_tokens, preempt, faults=None):
+    cfg, model, params = _built()
+    b = ContinuousBatcher(
+        model, params, num_slots=2, max_seq=MAX_SEQ, prefill_chunk=8,
+        paging=_spec(pool_tokens=pool_tokens), policy="priority",
+        preempt=preempt, faults=faults,
+    )
+    rng = np.random.default_rng(11)
+    hog = Request(uid=0, priority=10, max_new=16,
+                  tokens=rng.integers(1, cfg.vocab_size, (8,)).astype(np.int32))
+    b.submit(hog)
+    b.step()
+    b.step()  # hog is decoding and owns most of the pool
+    short = Request(uid=1, priority=0, max_new=6,
+                    tokens=rng.integers(1, cfg.vocab_size, (6,)).astype(np.int32))
+    b.submit(short)
+    b.run()
+    return {r.uid: r for r in b.finished}, b
+
+
+def test_preemption_swaps_out_victim_with_exact_restore():
+    """Tight pool: the high-priority-value hog yields to the short via
+    ONE swap-out + ONE swap-in, and BOTH decode token-for-token what a
+    roomy pool decodes — the snapshot/restore round-trip is exact."""
+    roomy, b_ref = _pressure_run(pool_tokens=8 * 8, preempt=False)
+    assert b_ref.swap_outs == 0
+    tight, b = _pressure_run(pool_tokens=4 * 8, preempt=True)
+    assert b.swap_outs == 1 and b.swap_ins == 1
+    assert tight[0].preemptions == 1
+    assert _tokens(roomy) == _tokens(tight)
+    _assert_clean(b)
+
+
+def test_refusal_only_without_preempt_still_drains():
+    roomy, _ = _pressure_run(pool_tokens=8 * 8, preempt=False)
+    tight, b = _pressure_run(pool_tokens=4 * 8, preempt=False)
+    assert b.swap_outs == 0
+    # the short waits for the hog instead of preempting it — same tokens,
+    # worse latency
+    assert _tokens(roomy) == _tokens(tight)
+    _assert_clean(b)
+
+
+def test_swap_dispatch_fault_degrades_to_refusal():
+    """A fault on the swap gather abandons THAT preemption attempt (no
+    state mutated — the seam fires before the dispatch); the engine
+    degrades to waiting, and tokens still match."""
+    roomy, _ = _pressure_run(pool_tokens=8 * 8, preempt=False)
+    plan = FaultPlan().script("dispatch", where="swap", count=None)
+    fin, b = _pressure_run(pool_tokens=4 * 8, preempt=True, faults=plan)
+    assert plan.fired >= 1 and b.swap_outs == 0
+    assert _tokens(roomy) == _tokens(fin)
+    _assert_clean(b)
+
+
+# --------------------------------------------------------------- engine API
+def test_engine_surfaces_terminal_failures():
+    cfg, model, params = _built()
+    batch = {
+        "tokens": np.random.default_rng(0).integers(
+            1, cfg.vocab_size, (2, 8)).astype(np.int32),
+    }
+    eng = ServeEngine(
+        model, params, max_seq=MAX_SEQ,
+        faults=FaultPlan().script("nan", uid=0, count=1),
+    )
+    with pytest.raises(RuntimeError, match="uid 0.*non-finite"):
+        eng.generate(batch, 4)
+
+
+def test_engine_transparent_under_transient_faults():
+    cfg, model, params = _built()
+    batch = {
+        "tokens": np.random.default_rng(0).integers(
+            1, cfg.vocab_size, (2, 8)).astype(np.int32),
+    }
+    base = ServeEngine(model, params, max_seq=MAX_SEQ).generate(batch, 4)
+    out = ServeEngine(
+        model, params, max_seq=MAX_SEQ,
+        faults=FaultPlan().script("dispatch", where="decode", count=2),
+    ).generate(batch, 4)
+    assert np.array_equal(base, out)
+
+
+# ----------------------------------------------------------- randomized chaos
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), paged=st.booleans())
+    def test_random_fault_schedules_never_crash_and_reconcile(seed, paged):
+        """Seeded random schedules across every probabilistic seam: run()
+        returns (never raises), the allocator reconciles at drain, and any
+        request that did NOT terminally fail matches the fault-free run
+        token-for-token."""
+        rng = np.random.default_rng(seed)
+        plan = FaultPlan(seed=seed)
+        for seam, sites in (
+            ("alloc", [None]), ("incref", [None]), ("adapter", [None]),
+            ("free", [None]),
+            ("dispatch", ["decode", "prefill", "cow", None]),
+        ):
+            if rng.random() < 0.5:
+                plan.probabilistic(
+                    seam, p=float(rng.uniform(0.05, 0.3)),
+                    where=sites[rng.integers(len(sites))], count=3,
+                )
+        if rng.random() < 0.3:
+            plan.script("nan", uid=int(rng.integers(3)), count=1)
+
+        base, _ = _serve(paged=paged)
+        fin, b = _serve(faults=plan, paged=paged)
+        assert set(fin) == set(base)  # every request retired, one way
+        for uid, req in fin.items():
+            if not req.failed:
+                assert list(req.out) == list(base[uid].out), uid
+        _assert_clean(b)
